@@ -1,0 +1,74 @@
+"""Kernel micro-bench: binary matmul vs dense reference.
+
+CPU wall times (interpret-mode Pallas) are NOT TPU-indicative; the derived
+columns that matter are the analytic VMEM working set, HBM bytes per tile,
+and arithmetic intensity — the quantities the BlockSpec design controls
+(see kernels/binary_matmul.py docstring).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as bz
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters
+
+
+def tile_stats(bt, bn, bk, M):
+    """Analytic per-tile VMEM bytes + arithmetic intensity for the kernel."""
+    x_b = bt * bk * 4
+    w_packed = M * (bk // 8) * bn
+    w_bf16 = bk * bn * 2
+    acc = bt * bn * 4
+    flops = 2 * bt * bn * bk * M
+    vmem = x_b + w_packed + acc
+    ai_packed = flops / (x_b + w_packed)
+    ai_dense = (2 * bt * bn * bk) / (x_b + w_bf16)
+    return vmem, ai_packed, ai_dense
+
+
+def run(quick: bool = False):
+    rows = []
+    T, K, N, M = (64, 256, 128, 2) if quick else (128, 512, 256, 2)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (T, K), jnp.float32)
+    W = jax.random.normal(key, (K, N), jnp.float32)
+    approx = bz.algorithm2(W, M=M, K_iters=8)
+    packed = bz.pack(approx)
+
+    t_ref = _time(jax.jit(lambda x: kref.binary_matmul_ref(
+        x, packed.B_packed, packed.alpha, K=K,
+        group_size=packed.group_size)), x)
+    rows.append(("kernel_binary_matmul_ref_jnp", t_ref,
+                 f"shape=({T},{K},{N})xM{M}"))
+    t_pal = _time(lambda x: kops.binary_matmul(
+        x, packed.B_packed, packed.alpha, K=K, group_size=packed.group_size,
+        interpret=True), x)
+    rows.append(("kernel_binary_matmul_pallas_interpret", t_pal,
+                 "interpret-mode (CPU correctness path, not TPU wall time)"))
+    t_dense = _time(jax.jit(lambda x: x @ W), x)
+    rows.append(("kernel_dense_matmul_xla", t_dense, "fp32 baseline"))
+
+    for bt, bn, bk in [(128, 128, 256), (256, 256, 512), (128, 256, 1024)]:
+        vmem, ai_p, ai_d = tile_stats(bt, bn, bk, M)
+        rows.append((
+            f"kernel_tilestats_bt{bt}_bn{bn}_bk{bk}", 0.0,
+            f"vmem_KB={vmem / 1024:.0f} AI_packed={ai_p:.0f} "
+            f"AI_bf16={ai_d:.0f} gain={ai_p / ai_d:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, secs, derived in run():
+        print(f"{name},{secs * 1e6:.0f},{derived}")

@@ -1,0 +1,55 @@
+"""Roofline table from the dry-run result cache (deliverable g).
+
+Reads experiments/dryrun/*.json and prints one row per (arch, shape, mesh):
+three roofline terms, the dominant bound, and MODEL_FLOPS/HLO_FLOPS.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun")
+
+
+def load_records(tag: str = ""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag and r.get("tag") != tag:
+            continue
+        if not tag and r.get("tag"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(quick: bool = False):
+    rows = []
+    for r in load_records():
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] == "skipped":
+            rows.append((name, 0.0, f"SKIP: {r['reason'][:60]}"))
+            continue
+        if r["status"] != "ok":
+            rows.append((name, 0.0, f"ERROR: {r.get('error', '?')[:80]}"))
+            continue
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / step_s if step_s else 0.0
+        rows.append((
+            name, r.get("total_s", 0.0),
+            f"compute_s={r['compute_s']:.3f} memory_s={r['memory_s']:.3f} "
+            f"collective_s={r['collective_s']:.3f} bound={r['bound']} "
+            f"roofline_frac={frac:.3f} "
+            f"model_flops_ratio={r.get('model_flops_ratio', 0):.2f}"))
+    if not rows:
+        rows.append(("roofline_no_results", 0.0,
+                     "run: python -m repro.launch.dryrun --all --mesh both"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, secs, derived in run():
+        print(f"{name},{secs * 1e6:.0f},{derived}")

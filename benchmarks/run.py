@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table + kernel + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table2", "benchmarks.table2_accuracy"),
+    ("table3", "benchmarks.table3_throughput"),
+    ("table4", "benchmarks.table4_resources"),
+    ("kernel", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline_bench"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+
+            mod = importlib.import_module(modname)
+            for name, secs, derived in mod.run(quick=args.quick):
+                print(f"{name},{secs * 1e6:.0f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{key}_FAILED,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"{key}_total,{(time.time() - t0) * 1e6:.0f},", flush=True)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

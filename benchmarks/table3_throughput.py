@@ -1,0 +1,61 @@
+"""Table III reproduction: throughput (fps) of BinArray configs vs the
+hypothetical 1-GOPS CPU, via the analytical performance model (Eq. 14-18).
+
+Prints our MAC-exact model's fps next to the paper's numbers with ratios.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import perf_model as pm
+
+PAPER = [
+    # (net, M, cfg, paper_fps)
+    ("cnn_a", 2, (1, 8, 2), 354.2),
+    ("cnn_a", 2, (1, 32, 2), 819.8),
+    ("cnn_b1", 4, (1, 8, 2), 46.7),
+    ("cnn_b1", 4, (1, 32, 2), 92.5),
+    ("cnn_b1", 4, (4, 32, 4), 728.4),
+    ("cnn_b1", 4, (16, 32, 4), 3845.5),
+    ("cnn_b2", 4, (1, 8, 2), 2.6),
+    ("cnn_b2", 4, (1, 32, 2), 7.7),
+    ("cnn_b2", 4, (4, 32, 4), 74.3),
+    ("cnn_b2", 4, (16, 32, 4), 350.0),
+    ("cnn_b1", 6, (16, 32, 4), 1036.0),
+    ("cnn_b2", 6, (16, 32, 4), 175.0),
+]
+
+PAPER_CPU = {"cnn_a": 111.8, "cnn_b1": 20.6, "cnn_b2": 1.8}
+
+
+def _net(name):
+    if name == "cnn_a":
+        return pm.cnn_a_layers(), False
+    if name == "cnn_b1":
+        return pm.mobilenet_layers(alpha=0.5, resolution=128), True
+    return pm.mobilenet_layers(alpha=1.0, resolution=224), True
+
+
+def run(quick: bool = False):
+    rows = []
+    for net, M, (nsa, d, march), paper_fps in PAPER:
+        t0 = time.time()
+        layers, excl = _net(net)
+        cfg = pm.BinArrayConfig(nsa, d, march)
+        ours = pm.fps(cfg, layers, M=M, exclude_final_dense=excl)
+        rows.append((
+            f"table3_{net}_M{M}_{cfg}", time.time() - t0,
+            f"model_fps={ours:.1f} paper_fps={paper_fps} "
+            f"ratio={ours / paper_fps:.2f}"))
+    for net, paper_fps in PAPER_CPU.items():
+        layers, _ = _net(net)
+        ours = pm.cpu_fps(layers)
+        rows.append((f"table3_cpu_{net}", 0.0,
+                     f"model_fps={ours:.1f} paper_fps={paper_fps} "
+                     f"ratio={ours / paper_fps:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, secs, derived in run():
+        print(f"{name},{secs * 1e6:.0f},{derived}")

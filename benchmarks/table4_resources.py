@@ -1,0 +1,72 @@
+"""Table IV reproduction: resource-usage model for BinArray configs, plus the
+TPU translation (HBM bytes for packed vs dense weights).
+
+FPGA side (paper §V-B4):
+  * DSP = N_SA * M_arch (exactly — one MAC per PA);
+  * weight BRAM = N_c*D_arch bits per PA + alpha distributed RAM;
+  * CNN-A fits in BRAM; CNN-B adds a 4 Mb global weight buffer.
+
+TPU side (the adaptation's equivalent claim): binary-packed weights divide
+HBM weight bytes by 16/M vs bf16 — reported per assigned-arch config.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import binarize as bz
+from repro.core import perf_model as pm
+
+PAPER_DSP = {(1, 8, 2): 2, (1, 32, 2): 2, (4, 32, 4): 16, (16, 32, 4): 64}
+DSP_TOTAL = 900  # XC7Z045
+
+
+def weight_bits(layers, M: int, *, bits_alpha: int = 8) -> int:
+    total = 0
+    for l in layers:
+        if isinstance(l, pm.DenseLayer):
+            n_c, d = l.N_in, l.N_out
+        else:
+            n_c = l.W_B * l.H_B * (1 if l.depthwise else l.C_I)
+            d = l.D
+        total += M * (n_c + bits_alpha) * d
+    return total
+
+
+def run(quick: bool = False):
+    rows = []
+    for cfg_t, dsp_expect in PAPER_DSP.items():
+        nsa, d, march = cfg_t
+        cfg = pm.BinArrayConfig(nsa, d, march)
+        dsp = nsa * march
+        t0 = time.time()
+        rows.append((f"table4_dsp_{cfg}", time.time() - t0,
+                     f"dsp={dsp} paper_dsp={dsp_expect} "
+                     f"util_pct={100 * dsp / DSP_TOTAL:.2f} match={dsp == dsp_expect}"))
+    # BRAM model: CNN-A binary weights fit on-chip (paper: 1.15% of 19.2Mb)
+    a_bits = weight_bits(pm.cnn_a_layers(), M=4)
+    rows.append(("table4_bram_cnn_a", 0.0,
+                 f"weight_Mb={a_bits / 1e6:.2f} fits_19.2Mb={a_bits < 19.2e6}"))
+    b2_bits = weight_bits(pm.mobilenet_layers(alpha=1.0, resolution=224), M=4)
+    rows.append(("table4_bram_cnn_b2", 0.0,
+                 f"weight_Mb={b2_bits / 1e6:.1f} needs_global_buffer="
+                 f"{b2_bits > 19.2e6 * 0.5}"))
+    # TPU translation: packed-vs-bf16 weight bytes for assigned archs
+    from repro.configs import base as cb
+    from repro.models import api
+
+    for arch in ("gemma_2b", "qwen3_14b", "deepseek_v3_671b"):
+        cfg = cb.get_config(arch)
+        n = api.count_params(cfg)
+        for M in (2, 4):
+            dense_gb = n * 2 / 1e9
+            packed_gb = n * M / 8 / 1e9
+            rows.append((
+                f"table4_tpu_{arch}_M{M}", 0.0,
+                f"bf16_GB={dense_gb:.1f} packed_GB={packed_gb:.1f} "
+                f"ratio={dense_gb / packed_gb:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, secs, derived in run():
+        print(f"{name},{secs * 1e6:.0f},{derived}")

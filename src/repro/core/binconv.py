@@ -1,0 +1,107 @@
+"""Binary-approximated convolution — the paper's §III mapped to JAX.
+
+A conv with binary-approximated filters is an im2col (patch extraction, the
+AGU's job on the FPGA) followed by the binary dot product (the PA's job):
+
+    O[b, u, v, d] = sum_m alpha_{m,d} * sum_{i} patch[b, u, v, i] * B_{m,i,d}
+
+The fused ReLU+max-pool epilogue reproduces the AMU (paper Eq. 13).  The
+dense (fp) path is the baseline the paper compares against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as bz
+from repro.core.binlinear import QuantConfig, DENSE
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
+           padding: str = "VALID") -> jax.Array:
+    """x: [B, H, W, C] -> patches [B, U, V, kh*kw*C] (row-major, like the
+    paper's feature-buffer layout)."""
+    B, H, W, C = x.shape
+    if padding == "SAME":
+        ph, pw = kh // 2, kw // 2
+        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+        H, W = x.shape[1], x.shape[2]
+    U = (H - kh) // stride + 1
+    V = (W - kw) // stride + 1
+    idx_u = jnp.arange(U) * stride
+    idx_v = jnp.arange(V) * stride
+    patches = jnp.stack(
+        [x[:, u0: u0 + H - kh + 1: stride, v0: v0 + W - kw + 1: stride, :]
+         for u0 in range(kh) for v0 in range(kw)], axis=3,
+    )  # [B, U, V, kh*kw, C]
+    del idx_u, idx_v
+    return patches.reshape(B, U, V, kh * kw * C)
+
+
+def conv2d(params: dict, x: jax.Array, *, stride: int = 1,
+           padding: str = "VALID", quant: QuantConfig = DENSE) -> jax.Array:
+    """Conv via im2col + (binary|dense) matmul.  params['w']: [kh,kw,C,D]."""
+    if quant.mode == "binary":
+        kh, kw = params["kh"], params["kw"]
+    else:
+        kh, kw, C, D = params["w"].shape
+    patches = im2col(x, kh, kw, stride, padding)
+    B, U, V, K = patches.shape
+    flat = patches.reshape(B * U * V, K)
+    if quant.mode == "dense":
+        y = flat @ params["w"].reshape(K, -1).astype(flat.dtype)
+    elif quant.mode == "fake_quant":
+        W = params["w"].reshape(K, -1).astype(jnp.float32)
+        W_hat = bz.fake_quant(W, quant.M, algorithm=quant.algorithm,
+                              K_iters=quant.K_iters, group_size=quant.group_size)
+        y = flat @ W_hat.astype(flat.dtype)
+    elif quant.mode == "binary":
+        Kf = flat.shape[-1]
+        gs = Kf // params["alpha"].shape[1]
+        if quant.use_pallas:
+            from repro.kernels import ops as kops
+
+            y = kops.binary_matmul(flat, params["B_packed"], params["alpha"],
+                                   K=Kf, group_size=gs,
+                                   m_active=quant.m_active,
+                                   interpret=quant.interpret)
+        else:
+            from repro.kernels import ref as kref
+
+            y = kref.binary_matmul_ref(flat, params["B_packed"], params["alpha"],
+                                       K=Kf, group_size=gs,
+                                       m_active=quant.m_active)
+    else:
+        raise ValueError(quant.mode)
+    D_out = y.shape[-1]
+    y = y.reshape(B, U, V, D_out)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def binarize_conv_params(params: dict, quant: QuantConfig) -> dict:
+    """Offline: fp conv filters -> packed binary form (per-filter alpha)."""
+    kh, kw, C, D = params["w"].shape
+    K = kh * kw * C
+    W = params["w"].reshape(K, D).astype(jnp.float32)
+    approx, _ = bz.approximate_tensor(
+        W, quant.M, algorithm=quant.algorithm, K_iters=quant.K_iters,
+        group_size=quant.group_size)
+    B = approx.B
+    pad = (-K) % 8
+    if pad:
+        B = jnp.concatenate([B, jnp.ones((quant.M, pad, D), jnp.int8)], axis=1)
+    out = {"B_packed": bz.pack_bits(B), "alpha": approx.alpha,
+           "kh": kh, "kw": kw}  # kh/kw: static ints (example-path only)
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+def relu_maxpool(x: jax.Array, pool: int) -> jax.Array:
+    """AMU: max-pool (downsampling only, paper §III-B) then ReLU == fused."""
+    B, H, W, C = x.shape
+    assert H % pool == 0 and W % pool == 0, "downsampling only (paper §III-B)"
+    y = x.reshape(B, H // pool, pool, W // pool, pool, C).max(axis=(2, 4))
+    return jnp.maximum(y, 0.0)

@@ -1,0 +1,172 @@
+"""BinArray analytical performance model (paper §IV-E, Eq. 14-18).
+
+Predicts cycles/frame and fps for a BinArray[N_SA, D_arch, M_arch] given a
+layer list.  Two variants:
+
+  * ``cc_layer`` — MAC-exact: every output pixel needs W_B·H_B·C_I
+    accumulations per binary level group; D_arch output channels in
+    parallel; N_pass passes when D > D_arch·N_LSA (Eq. 17).  The dense-layer
+    formula reproduces the paper's Table III composition exactly (the
+    819.8 fps CNN-A figure decomposes into 466,668 conv + 21,270 dense cc at
+    400 MHz with this dense model).
+  * ``cc_layer_eq18`` — the literal Eq. 18 text (W_I·H_I·C_I·W_B·H_I·N_pass/N_T);
+    kept for reference — the H_I factor where H_B is expected makes it
+    inconsistent with the paper's own fps tables (documented in
+    benchmarks/table3_throughput.py).
+
+Throughput mode (paper §IV-D): M > M_arch costs ceil(M/M_arch) passes via
+N_LSA (Eq. 15).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+CLOCK_HZ = 400e6  # paper §V-B2: timing closure at 400 MHz on XC7Z045-2
+
+
+@dataclasses.dataclass(frozen=True)
+class BinArrayConfig:
+    N_SA: int
+    D_arch: int
+    M_arch: int
+
+    def __str__(self):
+        return f"BinArray[{self.N_SA},{self.D_arch},{self.M_arch}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    W_I: int; H_I: int; C_I: int       # input feature dims
+    W_B: int; H_B: int; D: int         # kernel dims, output channels
+    stride: int = 1
+    padding: int = 0
+    depthwise: bool = False            # paper §V-A3: D_arch=1 for depth-wise
+
+    @property
+    def out_dims(self):
+        """Eq. 14."""
+        U = (self.W_I - self.W_B + 2 * self.padding) // self.stride + 1
+        V = (self.H_I - self.H_B + 2 * self.padding) // self.stride + 1
+        return U, V, self.D
+
+    @property
+    def macs(self) -> int:
+        U, V, D = self.out_dims
+        if self.depthwise:
+            return U * V * D * self.W_B * self.H_B
+        return U * V * D * self.W_B * self.H_B * self.C_I
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseLayer:
+    N_in: int
+    N_out: int
+
+    @property
+    def macs(self) -> int:
+        return self.N_in * self.N_out
+
+
+def n_lsa(cfg: BinArrayConfig, M: int) -> float:
+    """Eq. 15: logical SAs after folding M over M_arch passes."""
+    return cfg.N_SA / math.ceil(M / cfg.M_arch)
+
+
+def n_tiles(cfg: BinArrayConfig, layer: ConvLayer, M: int) -> int:
+    """Eq. 16 (with the feasibility constraint W_I/N_T > 1)."""
+    lsa = n_lsa(cfg, M)
+    d_arch = 1 if layer.depthwise else cfg.D_arch
+    nt = int(lsa // math.ceil(layer.D / d_arch))
+    nt = max(nt, 1)
+    while nt > 1 and (layer.W_I / nt <= 1 or layer.H_I / nt <= 1):
+        nt -= 1
+    return nt
+
+
+def n_pass(cfg: BinArrayConfig, D: int, M: int, depthwise: bool = False) -> int:
+    """Eq. 17."""
+    d_arch = 1 if depthwise else cfg.D_arch
+    lsa = max(n_lsa(cfg, M), 1e-9)
+    return math.ceil(max(1.0, D / (d_arch * lsa)))
+
+
+def cc_layer(cfg: BinArrayConfig, layer, M: int) -> float:
+    """MAC-exact cycle count for one layer."""
+    if isinstance(layer, DenseLayer):
+        # each PE accumulates N_in inputs; D_arch·N_LSA neurons in parallel
+        passes = n_pass(cfg, layer.N_out, M)
+        return layer.N_in * passes
+    U, V, D = layer.out_dims
+    d_arch = 1 if layer.depthwise else cfg.D_arch
+    passes = n_pass(cfg, D, M, layer.depthwise)
+    nt = n_tiles(cfg, layer, M)
+    per_pixel = layer.W_B * layer.H_B * (1 if layer.depthwise else layer.C_I)
+    return U * V * per_pixel * passes / nt
+
+
+def cc_layer_eq18(cfg: BinArrayConfig, layer: ConvLayer, M: int) -> float:
+    """Literal paper Eq. 18 (documented inconsistency — see module doc)."""
+    passes = n_pass(cfg, layer.D, M, layer.depthwise)
+    nt = n_tiles(cfg, layer, M)
+    return (layer.W_I * layer.H_I * layer.C_I * layer.W_B * layer.H_I
+            * passes) / nt
+
+
+def fps(cfg: BinArrayConfig, layers, M: int, *, clock_hz: float = CLOCK_HZ,
+        exclude_final_dense: bool = False) -> float:
+    """Frames/s for a network (paper offloads MobileNet's final dense+GAP to
+    the CPU — exclude_final_dense reproduces that)."""
+    use = list(layers)
+    if exclude_final_dense:
+        while use and isinstance(use[-1], DenseLayer):
+            use.pop()
+    total = sum(cc_layer(cfg, l, M) for l in use)
+    return clock_hz / total
+
+
+def total_macs(layers) -> int:
+    return sum(l.macs for l in layers)
+
+
+def cpu_fps(layers, *, gops: float = 1e9) -> float:
+    """The paper's hypothetical 1-GOPS CPU baseline (Table III)."""
+    return gops / total_macs(layers)
+
+
+# ---------------------------------------------------------------------------
+# Reference networks (paper §V-A1) as layer lists
+# ---------------------------------------------------------------------------
+
+def cnn_a_layers():
+    return [
+        ConvLayer(48, 48, 3, 7, 7, 5),
+        ConvLayer(21, 21, 5, 4, 4, 150),
+        DenseLayer(1350, 340),
+        DenseLayer(340, 490),
+        DenseLayer(490, 43),
+    ]
+
+
+def mobilenet_layers(*, alpha: float = 1.0, resolution: int = 224):
+    """MobileNetV1 (CNN-B1: alpha=.5 res=128; CNN-B2: alpha=1 res=224)."""
+    def c(ch):
+        return max(8, int(ch * alpha))
+
+    blocks = [(1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
+              (1, 512), (1, 512), (1, 512), (1, 512), (1, 512), (2, 1024),
+              (1, 1024)]
+    layers = []
+    r = resolution // 2
+    cin = c(32)
+    layers.append(ConvLayer(resolution, resolution, 3, 3, 3, cin, stride=2,
+                            padding=1))
+    for stride, cout in blocks:
+        cout = c(cout)
+        layers.append(ConvLayer(r, r, cin, 3, 3, cin, stride=stride,
+                                padding=1, depthwise=True))
+        r = r // stride
+        layers.append(ConvLayer(r, r, cin, 1, 1, cout))
+        cin = cout
+    layers.append(DenseLayer(cin, 1000))
+    return layers

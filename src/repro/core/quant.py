@@ -1,0 +1,93 @@
+"""Fixed-point quantization emulation (paper §III-C).
+
+The FPGA datapath uses DW=8-bit fixed-point activations with a per-layer
+binary-point position, MULW=28-bit accumulation inside the DSP cascade, and
+round-to-nearest + saturation when quantizing PA outputs back to DW bits
+before the AMU.  On TPU we keep fp32 accumulation (strictly wider than 28-bit
+fixed point) but provide a bit-faithful emulation of the DW-bit
+activation quantizer so the paper's "bit-accurate Python model" verification
+(§V-A2) can be reproduced, and an int8 activation path for deployment.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+DW = 8        # activation data width (paper)
+MULW = 28     # DSP accumulation width (paper; informational — we use fp32)
+
+
+class FixedPointSpec(NamedTuple):
+    """Per-layer fixed-point format: DW total bits, `frac` fractional bits."""
+
+    bits: int = DW
+    frac: int = 4  # binary point position; layer-dependent in the paper
+
+
+def quantize_fixed(x: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    """Round-to-nearest, saturate — the QS block of the SA (paper Fig. 7).
+
+    Emulates signed (bits, frac) fixed point on fp values: scale by 2^frac,
+    round, clip to [-2^(bits-1), 2^(bits-1)-1], rescale.
+    """
+    scale = jnp.asarray(2.0**spec.frac, x.dtype)
+    lo = -(2 ** (spec.bits - 1))
+    hi = 2 ** (spec.bits - 1) - 1
+    q = jnp.clip(jnp.round(x * scale), lo, hi)
+    return q / scale
+
+
+@jax.custom_vjp
+def quantize_fixed_ste(x: jax.Array, scale: jax.Array, lo: float, hi: float):
+    return jnp.clip(jnp.round(x * scale), lo, hi) / scale
+
+
+def _qfs_fwd(x, scale, lo, hi):
+    return quantize_fixed_ste(x, scale, lo, hi), None
+
+
+def _qfs_bwd(_, g):
+    return g, None, None, None
+
+
+quantize_fixed_ste.defvjp(_qfs_fwd, _qfs_bwd)
+
+
+def fake_quant_activation(x: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    """STE-wrapped activation quantizer for QAT with the fixed-point datapath."""
+    scale = jnp.asarray(2.0**spec.frac, x.dtype)
+    lo = float(-(2 ** (spec.bits - 1)))
+    hi = float(2 ** (spec.bits - 1) - 1)
+    return quantize_fixed_ste(x, scale, lo, hi)
+
+
+def choose_frac_bits(x_absmax: float, bits: int = DW) -> int:
+    """Pick the binary-point position covering |x| <= x_absmax (per layer)."""
+    import math
+
+    if x_absmax <= 0:
+        return bits - 1
+    int_bits = max(0, math.ceil(math.log2(x_absmax + 1e-12)) + 1)  # sign incl.
+    return max(0, bits - 1 - int_bits)
+
+
+# --- int8 symmetric activation quant (deployment path) ---------------------
+
+class Int8Quant(NamedTuple):
+    values: jax.Array   # int8
+    scale: jax.Array    # fp32 per-tensor (or per-row) scale
+
+
+def quantize_int8(x: jax.Array, axis: int | None = None) -> Int8Quant:
+    absmax = (
+        jnp.max(jnp.abs(x)) if axis is None else jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    )
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return Int8Quant(values=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize_int8(q: Int8Quant) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scale

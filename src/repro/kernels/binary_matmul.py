@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: multi-level binary matmul (the BinArray SA, re-thought).
+
+The FPGA systolic array computes, per output channel d and level m,
+    p_{d,m} = sum_i b_{i,m} * x_i            (PE: sign-change + accumulate)
+    o_d     = sum_m alpha_{d,m} * p_{d,m}    (PA: one DSP, time-multiplexed)
+
+On TPU the MXU *is* the systolic array.  What we keep from the paper is the
+storage format — M× 1-bit weights + per-(level, group) scales — and the
+computation order: per K-tile, unpack the packed bits to ±1 in VMEM, run one
+MXU matmul per level, and apply the alpha scaling as a VPU epilogue while
+accumulating in fp32 (the MULW=28 accumulator analogue, strictly wider).
+
+Tiling (BlockSpec, all multiples of MXU-friendly sizes):
+    x        [T, K]            -> blocks [BT, BK]
+    B_packed [M, K/8, N] uint8 -> blocks [m_active, BK/8, BN]
+    alpha    [M, G, N]         -> blocks [m_active, 1, BN]   (G = K/group_size)
+    out      [T, N] f32        -> blocks [BT, BN]
+
+Grid: (T/BT, N/BN, K/BK) with the K dimension innermost ("arbitrary"
+sequential), accumulating into the output block; alpha's group index is
+derived from the K block index (requires group_size % BK == 0 or BK == K).
+
+The per-level unpack costs BK/8 * BN uint8 VMEM loads per (BK x BN) tile —
+1/16 the bytes of a bf16 weight tile, which is exactly the paper's
+compression-factor win (Eq. 6) applied to the HBM->VMEM stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, bp_ref, alpha_ref, o_ref, *, m_active: int, n_k_blocks: int):
+    """One (BT, BN) output tile; invoked n_k_blocks times along the K grid."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...].astype(jnp.float32)           # [BT, BK]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)     # [BT, BN]
+    bk8 = bp_ref.shape[1]
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (bk8, 8, 1), 1)
+    for m in range(m_active):                     # static unroll over levels
+        packed = bp_ref[m]                        # [BK/8, BN] uint8
+        bits = (packed[:, None, :] >> shifts) & jnp.uint8(1)
+        bpm = (bits.astype(jnp.int8) * 2 - 1).reshape(-1, packed.shape[-1])
+        p = jax.lax.dot_general(
+            xb, bpm.astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                         # [BT, BN]
+        acc = acc + alpha_ref[m, 0, :][None, :] * p
+    o_ref[...] = o_ref[...] + acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("K", "group_size", "m_active", "bt", "bn", "bk", "interpret"),
+)
+def binary_matmul_pallas(
+    x: jax.Array,
+    B_packed: jax.Array,
+    alpha: jax.Array,
+    *,
+    K: int,
+    group_size: int,
+    m_active: int | None = None,
+    bt: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[T, N] = sum_m alpha_m ⊙ (x @ B_m) over bit-packed B.  fp32 output.
+
+    Pads T/N/K to block multiples; K-padding is safe because padded x columns
+    are zero.  ``group_size % bk == 0`` required (group boundaries align with
+    K tiles); the ops.py wrapper picks a legal bk automatically.
+    """
+    T, Kx = x.shape
+    M, K8, N = B_packed.shape
+    assert Kx == K, (Kx, K)
+    m_active = m_active or M
+    G = alpha.shape[1]
+    assert G * group_size == K, (G, group_size, K)
+    assert group_size % bk == 0 or G == 1, (group_size, bk)
+
+    K_pad = K8 * 8
+    # pad x's K to K_pad (packed buffer is already padded)
+    if K_pad != K:
+        x = jnp.pad(x, ((0, 0), (0, K_pad - K)))
+    # pad K_pad to a multiple of bk
+    k_rem = (-K_pad) % bk
+    if k_rem:
+        x = jnp.pad(x, ((0, 0), (0, k_rem)))
+        B_packed = jnp.pad(B_packed, ((0, 0), (0, k_rem // 8), (0, 0)))
+    Kp = K_pad + k_rem
+    t_rem = (-T) % bt
+    if t_rem:
+        x = jnp.pad(x, ((0, t_rem), (0, 0)))
+    n_rem = (-N) % bn
+    if n_rem:
+        B_packed = jnp.pad(B_packed, ((0, 0), (0, 0), (0, n_rem)))
+        alpha = jnp.pad(alpha, ((0, 0), (0, 0), (0, n_rem)))
+    Tp, Np = T + t_rem, N + n_rem
+
+    B_packed = B_packed[:m_active]
+    alpha = alpha[:m_active].astype(jnp.float32)
+    n_k_blocks = Kp // bk
+    grid = (Tp // bt, Np // bn, n_k_blocks)
+
+    # group index of K-block k: (k * bk) // group_size  (static ints)
+    def alpha_idx(t, n, k):
+        return (0, (k * bk) // group_size if G > 1 else 0, n)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, m_active=m_active, n_k_blocks=n_k_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda t, n, k: (t, k)),
+            pl.BlockSpec((m_active, bk // 8, bn), lambda t, n, k: (0, k, n)),
+            pl.BlockSpec((m_active, 1, bn), alpha_idx),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda t, n, k: (t, n)),
+        out_shape=jax.ShapeDtypeStruct((Tp, Np), jnp.float32),
+        interpret=interpret,
+    )(x, B_packed, alpha)
+    return out[:T, :N]

@@ -1,0 +1,58 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``binary_matmul`` flattens leading dims, picks legal block sizes for the
+actual problem shape, and routes to the Pallas kernel (TPU, or interpret=True
+for CPU validation).  The dry-run / pure-XLA path uses kernels/ref.py instead
+(see repro.core.binlinear).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import binary_matmul as bmk
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred that keeps padding sane."""
+    b = preferred
+    while b > dim and b > 8:
+        b //= 2
+    return max(b, 8)
+
+
+def binary_matmul(
+    x: jax.Array,
+    B_packed: jax.Array,
+    alpha: jax.Array,
+    *,
+    K: int,
+    group_size: int,
+    m_active: int | None = None,
+    interpret: bool = False,
+    bt: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """y[..., N] = sum_m alpha_m ⊙ (x[..., K] @ B_m);  fp32 accumulate."""
+    lead = x.shape[:-1]
+    T = 1
+    for d in lead:
+        T *= d
+    x2 = x.reshape(T, K)
+    M, K8, N = B_packed.shape
+
+    bt = bt or _pick_block(T, 128)
+    bn = bn or _pick_block(N, 128)
+    # bk must divide group_size (or G == 1); cap at 256 for VMEM
+    if alpha.shape[1] == 1:
+        bk = bk or _pick_block(K8 * 8, 256)
+    else:
+        bk = bk or _pick_block(group_size, 256)
+        while group_size % bk and bk > 8:
+            bk //= 2
+    y = bmk.binary_matmul_pallas(
+        x2, B_packed, alpha, K=K, group_size=group_size,
+        m_active=m_active, bt=bt, bn=bn, bk=bk, interpret=interpret,
+    )
+    return y.reshape(*lead, N).astype(x.dtype) if x.dtype != jnp.float32 else y.reshape(*lead, N)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the "bit-accurate Python model" of the paper's verification setup
+(§V-A2, Fig. 11): the Pallas kernels must match these references to fp32
+accumulation accuracy across shape/dtype sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binarize as bz
+
+
+def binary_matmul_ref(
+    x: jax.Array,
+    B_packed: jax.Array,
+    alpha: jax.Array,
+    *,
+    K: int,
+    group_size: int,
+    m_active: int | None = None,
+) -> jax.Array:
+    """y = sum_{m<m_active} alpha_m ⊙ (x @ B_m)   (paper Eq. 8, grouped alpha).
+
+    x:        [..., K]  (any float dtype)
+    B_packed: [M, K_pad//8, N] uint8   (K_pad = 8*ceil(K/8))
+    alpha:    [M, G, N] float          (G = K // group_size)
+    returns   [..., N] float32
+    """
+    M, K8, N = B_packed.shape
+    m = m_active or M
+    K_pad = K8 * 8
+    B = bz.unpack_bits(B_packed[:m], K_pad)[:, :K, :].astype(jnp.float32)
+    G = K // group_size
+    xf = x.astype(jnp.float32)
+    lead = xf.shape[:-1]
+    xg = xf.reshape(*lead, G, group_size)
+    Bg = B.reshape(m, G, group_size, N)
+    # per-(level, group) partial sums, then alpha-weighted reduction:
+    p = jnp.einsum("...gk,mgkn->...mgn", xg, Bg)
+    y = jnp.einsum("...mgn,mgn->...n", p, alpha[:m].astype(jnp.float32))
+    return y
+
+
+def binary_matmul_dense_equiv(
+    x: jax.Array, approx: bz.BinApprox, m_active: int | None = None
+) -> jax.Array:
+    """Same computation via explicit W_hat reconstruction (identity check)."""
+    m = m_active or approx.M
+    sub = bz.BinApprox(B=approx.B[:m], alpha=approx.alpha[:m],
+                       group_size=approx.group_size)
+    return x.astype(jnp.float32) @ bz.reconstruct(sub)
+
+
+def fused_binary_matmul_relu_pool_ref(
+    x: jax.Array,
+    B_packed: jax.Array,
+    alpha: jax.Array,
+    *,
+    K: int,
+    group_size: int,
+    pool: int = 1,
+    m_active: int | None = None,
+) -> jax.Array:
+    """Binary matmul + AMU epilogue (paper §III-B): max-pool over ``pool``
+    consecutive rows then ReLU — using max(y, 0) over the window, which equals
+    ReLU∘maxpool by commutativity (paper Eq. 13).
+
+    x: [T, K] with T % pool == 0 -> [T//pool, N].
+    """
+    y = binary_matmul_ref(x, B_packed, alpha, K=K, group_size=group_size,
+                          m_active=m_active)
+    T, N = y.shape
+    y = y.reshape(T // pool, pool, N)
+    return jnp.maximum(jnp.max(y, axis=1), 0.0)

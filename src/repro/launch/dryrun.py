@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines: jax locks the device count on first init.
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the train or
+serve step on the production meshes:
+
+    single-pod : (16, 16)      ("data", "model")     = 256 chips
+    multi-pod  : (2, 16, 16)   ("pod","data","model") = 512 chips
+
+and record memory_analysis / cost_analysis / collective schedule + the
+three-term roofline (launch/hlo_analysis.py) into
+experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma_2b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both          # every cell
+    python -m repro.launch.dryrun --all --subprocess         # isolate compiles
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def _result_path(arch: str, shape: str, mesh_kind: str, tag: str = "") -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+
+
+def _lower_for(cfg, mesh, shape_name, specs, *, microbatch=None):
+    from repro.configs import base as cb
+    from repro.launch import steps
+    from repro.optim import adamw
+
+    kind = cb.SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return steps.lower_train_step(cfg, mesh, adamw(1e-4), specs,
+                                      microbatch=microbatch)
+    return steps.lower_serve_step(
+        cfg, mesh, specs, kind="prefill" if kind == "prefill" else "decode",
+        fsdp_params=cfg.serve_fsdp)
+
+
+def _depth_pair(cfg):
+    """Two reduced depths for the affine per-layer cost fit.
+
+    XLA's cost analysis counts a scan body ONCE regardless of trip count, so
+    full-depth compiled FLOPs/bytes under-report by ~n_layers.  Costs are
+    affine in depth: cost(n) = intercept(embed/unembed/head) + n * per_layer.
+    We compile two shallow variants and extrapolate to the full depth.
+    Depths respect structural constraints (leading dense layers, hybrid
+    attention period).
+    """
+    if cfg.n_dense_layers:                       # deepseek: 3 dense + moe
+        return cfg.n_dense_layers + 1, cfg.n_dense_layers + 2
+    if cfg.family == "hybrid":                   # zamba2: shared attn every 6
+        return cfg.hybrid_attn_every, 2 * cfg.hybrid_attn_every
+    return 2, 4
+
+
+def _with_depth(cfg, n):
+    # scan_layers=False: the shallow variants must be UNROLLED — XLA cost
+    # analysis sees a scan body exactly once whatever the trip count, so a
+    # scanned shallow model measures the same as a scanned deep one.
+    kw = {"n_layers": n, "scan_layers": False}
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = n               # whisper scales both stacks
+    return cfg.replace(**kw)
+
+
+def _measured_costs(compiled, n_dev):
+    from repro.launch import hlo_analysis as ha
+
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    text = compiled.as_text()
+    coll = ha.collective_stats(text, n_dev)
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            coll.wire_bytes)
+
+
+def extrapolated_costs(cfg, mesh, shape_name, *, n_dev) -> dict:
+    """Affine-in-depth extrapolation of (flops, bytes, wire_bytes)."""
+    from repro.configs import base as cb
+
+    n_full = cfg.n_layers
+    d1, d2 = _depth_pair(cfg)
+    vals = {}
+    for d in (d1, d2):
+        c = _with_depth(cfg, d)
+        specs = cb.input_specs(c, shape_name)
+        compiled = _lower_for(c, mesh, shape_name, specs).compile()
+        vals[d] = _measured_costs(compiled, n_dev)
+    slope = [(b - a) / (d2 - d1) for a, b in zip(vals[d1], vals[d2])]
+    full = [v + s * (n_full - d1) for v, s in zip(vals[d1], slope)]
+    return {
+        "flops": full[0], "bytes": full[1], "wire_bytes": full[2],
+        "per_layer": {"flops": slope[0], "bytes": slope[1],
+                      "wire_bytes": slope[2]},
+        "depths_used": [d1, d2],
+    }
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, tag: str = "",
+             overrides: dict | None = None) -> dict:
+    """Lower + compile one cell; returns the result record."""
+    import jax
+
+    from repro.configs import base as cb
+    from repro.launch import hlo_analysis as ha
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import steps
+    from repro.models import api
+    from repro.optim import adamw
+
+    t0 = time.time()
+    cfg = cb.get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    sh = cb.SHAPES[shape]
+    record: dict = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "tag": tag,
+        "kind": sh["kind"], "seq_len": sh["seq_len"],
+        "global_batch": sh["global_batch"], "status": "pending",
+    }
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        record["status"] = "skipped"
+        record["reason"] = ("full-attention arch: long_500k requires "
+                            "sub-quadratic attention (DESIGN.md §5)")
+        return record
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    specs = cb.input_specs(cfg, shape)
+    tokens = sh["global_batch"] * (sh["seq_len"] if sh["kind"] != "decode" else 1)
+    n_active = api.count_params(cfg, active_only=True)
+    model_flops = (6 if sh["kind"] == "train" else 2) * n_active * tokens
+
+    # full compile: microbatched grad accumulation (deployable memory config);
+    # cost extrapolation below runs un-microbatched (flops/bytes identical,
+    # see _depth_pair) so the two concerns stay separable.
+    microbatch = 8 if sh["kind"] == "train" else None
+    record["microbatch"] = microbatch
+    lowered = _lower_for(cfg, mesh, shape, specs, microbatch=microbatch)
+    record["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 1)
+    mem = compiled.memory_analysis()
+    print(f"[{arch}/{shape}/{mesh_kind}] memory_analysis:", mem)
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    print(f"[{arch}/{shape}/{mesh_kind}] cost_analysis: flops={ca.get('flops', 0):.3e}"
+          f" bytes={ca.get('bytes accessed', 0):.3e}")
+    terms = ha.roofline(compiled, total_devices=n_dev, model_flops=model_flops)
+    record.update(terms.as_dict())
+    record["raw_compiled"] = {  # full-depth module (scan bodies counted once)
+        "flops_per_device": terms.flops_per_device,
+        "bytes_per_device": terms.bytes_per_device,
+        "wire_bytes_per_device": terms.wire_bytes_per_device,
+    }
+    # depth-extrapolated terms (see _depth_pair docstring)
+    ext = extrapolated_costs(cfg, mesh, shape, n_dev=n_dev)
+    record["extrapolation"] = ext
+    record["flops_per_device"] = ext["flops"]
+    record["bytes_per_device"] = ext["bytes"]
+    record["wire_bytes_per_device"] = ext["wire_bytes"]
+    record["compute_s"] = ext["flops"] / ha.PEAK_FLOPS
+    record["memory_s"] = ext["bytes"] / ha.HBM_BW
+    record["collective_s"] = ext["wire_bytes"] / ha.ICI_BW
+    terms3 = {"compute": record["compute_s"], "memory": record["memory_s"],
+              "collective": record["collective_s"]}
+    record["bound"] = max(terms3, key=terms3.get)
+    if record["flops_per_device"]:
+        record["model_flops_ratio"] = model_flops / (
+            record["flops_per_device"] * n_dev)
+    record["n_devices"] = n_dev
+    record["n_params"] = api.count_params(cfg)
+    record["n_active_params"] = n_active
+    record["status"] = "ok"
+    record["total_s"] = round(time.time() - t0, 1)
+    return record
+
+
+def run_and_save(arch: str, shape: str, mesh_kind: str, *, tag: str = "",
+                 overrides: dict | None = None) -> dict:
+    try:
+        record = run_cell(arch, shape, mesh_kind, tag=tag, overrides=overrides)
+    except Exception as e:  # noqa: BLE001 — failures are recorded, not raised
+        record = {"arch": arch, "shape": shape, "mesh": mesh_kind, "tag": tag,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-3000:]}
+    path = _result_path(arch, shape, mesh_kind, tag)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    print(f"[{arch}/{shape}/{mesh_kind}] -> {record['status']} ({path})")
+    return record
+
+
+def main() -> None:
+    from repro.configs import base as cb
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="isolate each compile in a fresh process")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in cb.ARCH_IDS
+                 for s in cb.cells(cb.get_config(a))]
+        # also record the documented skips
+        skips = [(a, "long_500k") for a in cb.ARCH_IDS
+                 if "long_500k" not in cb.cells(cb.get_config(a))]
+        cells += skips
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            path = _result_path(arch, shape, mesh_kind, args.tag)
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    if json.load(f).get("status") in ("ok", "skipped"):
+                        print(f"[{arch}/{shape}/{mesh_kind}] cached — skip")
+                        continue
+            if args.subprocess:
+                rc = subprocess.call(
+                    [sys.executable, "-m", "repro.launch.dryrun",
+                     "--arch", arch, "--shape", shape, "--mesh", mesh_kind]
+                    + (["--force"] if args.force else [])
+                    + (["--tag", args.tag] if args.tag else []),
+                    env=dict(os.environ),
+                )
+                if rc:
+                    failures += 1
+            else:
+                rec = run_and_save(arch, shape, mesh_kind, tag=args.tag)
+                if rec["status"] == "error":
+                    failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

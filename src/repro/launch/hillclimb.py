@@ -1,0 +1,141 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Perf hillclimb driver (EXPERIMENTS.md §Perf).
+
+Three cells (picked per the assignment rubric from the baseline roofline
+table):
+  A qwen3_14b/decode_32k   — worst roofline fraction AND the cell most
+                             representative of the paper's technique
+                             (binary weights attack decode's memory wall);
+  B gemma_2b/decode_32k    — most collective-bound baseline;
+  C codeqwen15_7b/train_4k — memory-bound training (attention S^2 traffic).
+
+Each iteration is (tag, cfg overrides); results land in
+experiments/dryrun/<arch>__<shape>__<mesh>__<tag>.json next to the
+baselines.  Every record with a binary quant config also carries
+``adjusted_bytes_per_device``: the XLA CPU lowering of the reference binary
+path materializes the dequantized fp32 weights (an artifact the Pallas
+kernel avoids by unpacking in VMEM — kernels/binary_matmul.py, validated in
+interpret mode); the adjustment subtracts that analytic artifact:
+    artifact ~= 8 bytes * M * (binarized params per device)
+(4B convert-write + 4B dot-read of the dequantized tensor).
+
+Usage:
+    python -m repro.launch.hillclimb --cell A          # all iterations
+    python -m repro.launch.hillclimb --cell A --iter bin_M4
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binlinear import QuantConfig
+from repro.launch import dryrun
+from repro.launch import hlo_analysis as ha
+
+
+def _bin(M, m_active=None):
+    return QuantConfig(mode="binary", M=M, K_iters=2, m_active=m_active)
+
+
+CELLS = {
+    # cell: (arch, shape, mesh, [(tag, overrides), ...])
+    "A": ("qwen3_14b", "decode_32k", "single", [
+        # paper-faithful deployment: M=4 binary weights, same sharding
+        ("bin_M4", {"quant": _bin(4)}),
+        # + serving-appropriate params (TP-only, no FSDP all-gathers)
+        ("bin_M4_tponly", {"quant": _bin(4), "serve_fsdp": False}),
+        # beyond-paper: runtime throughput mode on the same buffers
+        ("bin_M4_m2_tponly", {"quant": _bin(4, m_active=2),
+                              "serve_fsdp": False}),
+        # ablation: dense weights, TP-only (isolates the sharding fix)
+        ("dense_tponly", {"serve_fsdp": False}),
+        # seq-sharded KV cache: kills the per-layer fp32 logits all-reduce
+        # (kv=8 heads don't divide the 16-way model axis)
+        ("dense_seqshard", {"serve_fsdp": False, "kv_seq_shard": True}),
+        ("bin_M4_seqshard", {"quant": _bin(4), "serve_fsdp": False,
+                             "kv_seq_shard": True}),
+    ]),
+    "B": ("grok_1_314b", "train_4k", "single", [
+        # hypothesis: collective term is FSDP expert-weight all-gathers x3
+        # (fwd + remat-bwd re-gather) + grad reduce-scatter.  remat=False
+        # removes the re-gather (microbatching keeps activations bounded).
+        ("remat_off", {"remat": False}),
+        # hypothesis: combine/dispatch collectives scale with capacity_factor
+        ("cf10_remat_off", {"remat": False, "capacity_factor": 1.0}),
+    ]),
+    "C": ("codeqwen15_7b", "train_4k", "single", [
+        ("chunk512", {"attn_chunk": 512}),
+        ("chunk512_onehot", {"attn_chunk": 512, "onehot_loss": True}),
+        ("chunk1024_onehot", {"attn_chunk": 1024, "onehot_loss": True}),
+        # mixed-precision attention (bf16 operands, fp32 MXU accumulation):
+        # the HLO op-bytes profile showed fp32 dX partial-sum all-reduces +
+        # ~1 TB of convert traffic from fp32-cast attention inputs
+        # (same overrides as chunk1024_onehot; the iteration is the code
+        # change in attention.py — run AFTER it lands)
+        ("mixedprec_chunk_onehot", {"attn_chunk": 1024, "onehot_loss": True}),
+    ]),
+    # serving-sharding study on the most collective-bound DECODE cell
+    "D": ("gemma_2b", "decode_32k", "single", [
+        ("tponly", {"serve_fsdp": False}),
+        ("tponly_binM2", {"quant": _bin(2), "serve_fsdp": False}),
+        ("seqshard_binM2", {"quant": _bin(2), "serve_fsdp": False,
+                            "kv_seq_shard": True}),
+    ]),
+}
+
+
+def _binarized_param_bytes_per_device(cfg, n_model_shards: int) -> float:
+    """Analytic: fp32-dequant artifact bytes per device for the ref path."""
+    from repro.models import api
+
+    shapes = jax.eval_shape(
+        lambda k: api.binarize_model_params(cfg, api.init_params(cfg, k),
+                                            qc=cfg.quant),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    packed_elems = sum(
+        l.size for l in jax.tree.leaves(shapes) if l.dtype == jnp.uint8)
+    m = cfg.quant.m_active or cfg.quant.M
+    # packed_elems = M * ceil(K/8) * N summed -> P_bin = packed_elems*8/M
+    p_bin = packed_elems * 8 / cfg.quant.M
+    return 8.0 * m * p_bin / n_model_shards
+
+
+def run_iteration(cell: str, tag: str, overrides: dict):
+    arch, shape, mesh_kind, iters = CELLS[cell]
+    rec = dryrun.run_and_save(arch, shape, mesh_kind, tag=tag,
+                              overrides=overrides)
+    if rec["status"] == "ok" and overrides.get("quant") is not None:
+        from repro.configs import base as cb
+
+        cfg = cb.get_config(arch).replace(**overrides)
+        artifact = _binarized_param_bytes_per_device(cfg, 16)
+        adj = max(rec["bytes_per_device"] - artifact, 0.0)
+        rec["dequant_artifact_bytes"] = artifact
+        rec["adjusted_bytes_per_device"] = adj
+        rec["adjusted_memory_s"] = adj / ha.HBM_BW
+        path = dryrun._result_path(arch, shape, mesh_kind, tag)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--iter", default=None)
+    args = ap.parse_args()
+    arch, shape, mesh_kind, iters = CELLS[args.cell]
+    for tag, overrides in iters:
+        if args.iter and tag != args.iter:
+            continue
+        rec = run_iteration(args.cell, tag, overrides)
+        keys = ("status", "compute_s", "memory_s", "adjusted_memory_s",
+                "collective_s", "bound")
+        print(f"[{args.cell}:{tag}]",
+              {k: rec.get(k) for k in keys if rec.get(k) is not None})
+
+
+if __name__ == "__main__":
+    main()

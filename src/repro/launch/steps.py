@@ -1,0 +1,256 @@
+"""jit-compiled train / serve step builders with full sharding wiring.
+
+These are the functions the dry-run lowers and the trainer executes:
+
+  build_train_step(cfg, mesh, optimizer, ...)   -> (step_fn, state_specs)
+  build_serve_step(cfg, mesh)                   -> step_fn
+
+The train step consumes {params, opt_state, step} + batch and returns the
+updated state + metrics; supports microbatch gradient accumulation and
+optional binary gradient compression (core/compress.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.models import common as cm
+from repro.optim import Optimizer
+from repro.sharding import rules as shr
+
+
+def install_rules(cfg: ArchConfig, mesh: Mesh, *, seq_sharded: bool = False):
+    cm.set_axis_rules(
+        shr.activation_rules(mesh, seq_sharded=seq_sharded),
+        dict(mesh.shape),
+    )
+
+
+def train_state_specs(cfg: ArchConfig, mesh: Mesh, optimizer: Optimizer):
+    """PartitionSpec pytree for {params, opt_state, step} (FSDP+TP)."""
+    param_shapes = jax.eval_shape(
+        lambda k: api.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = shr.param_pspecs(cfg, param_shapes, mesh)
+    opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+    # optimizer state mirrors the param tree per moment buffer
+    ospecs = {key: pspecs for key in opt_shapes.keys()}
+    return {"params": pspecs, "opt_state": ospecs, "step": P()}
+
+
+def init_train_state(cfg: ArchConfig, mesh: Mesh, optimizer: Optimizer,
+                     seed: int = 0):
+    """Initialize sharded state ON the mesh (params materialize sharded)."""
+    specs = train_state_specs(cfg, mesh, optimizer)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+
+    def init_fn(key):
+        params = api.init_params(cfg, key)
+        return {"params": params, "opt_state": optimizer.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    with mesh:
+        return jax.jit(init_fn, out_shardings=shardings)(jax.random.PRNGKey(seed))
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, optimizer: Optimizer, *,
+                     microbatch: int | None = None,
+                     grad_compress_M: int = 0,
+                     donate: bool = True,
+                     seq_sharded: bool = False):
+    """Returns jit'd step(state, batch) -> (state, metrics)."""
+    install_rules(cfg, mesh, seq_sharded=seq_sharded)
+    state_specs = train_state_specs(cfg, mesh, optimizer)
+
+    def loss_for(params, batch):
+        loss, metrics = api.loss_fn(cfg, params, batch)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if microbatch and microbatch > 1:
+            B = batch["tokens"].shape[0]
+            assert B % microbatch == 0
+            mb = B // microbatch
+            mb_batches = jax.tree.map(
+                lambda t: t.reshape(microbatch, mb, *t.shape[1:]), batch)
+
+            def body(carry, mb_batch):
+                acc, met_acc = carry
+                (_, met), g = jax.value_and_grad(loss_for, has_aux=True)(
+                    params, mb_batch)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return (acc, jax.tree.map(jnp.add, met_acc, met)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            met_shapes = jax.eval_shape(
+                lambda b: loss_for(params, b)[1],
+                jax.tree.map(lambda t: t[0], mb_batches))
+            zero_m = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), met_shapes)
+            (grads, met_sum), _ = jax.lax.scan(
+                body, (zero_g, zero_m), mb_batches)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            metrics = jax.tree.map(lambda m: m / microbatch, met_sum)
+            return grads, metrics
+        (_, metrics), grads = jax.value_and_grad(loss_for, has_aux=True)(
+            params, batch)
+        return grads, metrics
+
+    def step_fn(state, batch):
+        grads, metrics = grads_of(state["params"], batch)
+        if grad_compress_M:
+            from repro.core import compress as gc
+
+            grads, comp_state = gc.compress_grads(
+                grads, state["grad_comp"], M=grad_compress_M)
+        new_params, new_opt = optimizer.update(
+            grads, state["opt_state"], state["params"], state["step"])
+        new_state = dict(state, params=new_params, opt_state=new_opt,
+                         step=state["step"] + 1)
+        if grad_compress_M:
+            new_state["grad_comp"] = comp_state
+        return new_state, metrics
+
+    batch_shapes = None  # resolved per-call by jit
+    state_shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    jit_kwargs: dict[str, Any] = dict(
+        # batch shardings resolved via with_sharding_constraint + defaults
+        donate_argnums=(0,) if donate else (),
+    )
+    return jax.jit(step_fn, **jit_kwargs), state_specs
+
+
+def lower_train_step(cfg: ArchConfig, mesh: Mesh, optimizer: Optimizer,
+                     batch_specs, *, microbatch: int | None = None,
+                     seq_sharded: bool = False):
+    """Dry-run entry: .lower() the train step with explicit in/out shardings
+    over ShapeDtypeStructs (no allocation).  microbatch > 1 scans gradient
+    accumulation over batch slices (activation memory / microbatch)."""
+    install_rules(cfg, mesh, seq_sharded=seq_sharded)
+    state_specs = train_state_specs(cfg, mesh, optimizer)
+    state_shapes = _train_state_shapes(cfg, optimizer)
+    bspecs = shr.batch_pspecs(cfg, batch_specs, mesh, seq_sharded=seq_sharded)
+
+    def loss_for(params, b):
+        return api.loss_fn(cfg, params, b)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if microbatch and microbatch > 1:
+            B = batch["tokens"].shape[0]
+            assert B % microbatch == 0, (B, microbatch)
+            mb = B // microbatch
+            mb_batches = jax.tree.map(
+                lambda t: t.reshape(microbatch, mb, *t.shape[1:]), batch)
+
+            def body(carry, mb_batch):
+                acc, met_acc = carry
+                (_, met), g = jax.value_and_grad(loss_for, has_aux=True)(
+                    params, mb_batch)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return (acc, jax.tree.map(jnp.add, met_acc, met)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            met_shapes = jax.eval_shape(
+                lambda b: loss_for(params, b)[1],
+                jax.tree.map(lambda t: t[0], mb_batches))
+            zero_m = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), met_shapes)
+            (grads, met_sum), _ = jax.lax.scan(body, (zero_g, zero_m), mb_batches)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            metrics = jax.tree.map(lambda m: m / microbatch, met_sum)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+        new_params, new_opt = optimizer.update(
+            grads, state["opt_state"], state["params"], state["step"])
+        return dict(state, params=new_params, opt_state=new_opt,
+                    step=state["step"] + 1), metrics
+
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                     is_leaf=lambda x: isinstance(x, P)),
+    )
+    out_shardings = (in_shardings[0], None)
+    with mesh:
+        return jax.jit(
+            step_fn, in_shardings=in_shardings, out_shardings=out_shardings,
+            donate_argnums=(0,),
+        ).lower(state_shapes, batch_specs)
+
+
+def _train_state_shapes(cfg: ArchConfig, optimizer: Optimizer):
+    param_shapes = jax.eval_shape(
+        lambda k: api.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+    return {"params": param_shapes, "opt_state": opt_shapes,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def lower_serve_step(cfg: ArchConfig, mesh: Mesh, batch_specs, *,
+                     kind: str = "decode", seq_sharded: bool = False,
+                     fsdp_params: bool = True):
+    """Dry-run entry for decode/prefill steps.
+
+    cfg.quant.mode == 'binary' lowers over the PACKED parameter tree (the
+    paper's deployment form).  fsdp_params=False shards params TP-only
+    (replicated over the DP axes) — the serving-appropriate layout that
+    removes per-step FSDP all-gathers (see EXPERIMENTS.md §Perf).
+    """
+    install_rules(cfg, mesh, seq_sharded=seq_sharded)
+    if cfg.quant.mode == "binary":
+        param_shapes = jax.eval_shape(
+            lambda k: api.binarize_model_params(
+                cfg, api.init_params(cfg, k), qc=cfg.quant),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    else:
+        param_shapes = jax.eval_shape(
+            lambda k: api.init_params(cfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = shr.param_pspecs(cfg, param_shapes, mesh, fsdp=fsdp_params)
+    bspecs = shr.batch_pspecs(cfg, batch_specs, mesh, seq_sharded=seq_sharded)
+
+    if kind == "decode":
+        def step_fn(params, batch):
+            logits, new_cache = api.decode_step(cfg, params, batch)
+            return logits, new_cache
+
+        out_shardings = (None, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), bspecs["cache"],
+            is_leaf=lambda x: isinstance(x, P)))
+    else:  # prefill: forward only
+        def step_fn(params, batch):
+            logits, _ = api.forward(cfg, params, batch)
+            return logits
+
+        out_shardings = None
+
+    in_shardings = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                     is_leaf=lambda x: isinstance(x, P)),
+    )
+    with mesh:
+        return jax.jit(step_fn, in_shardings=in_shardings,
+                       out_shardings=out_shardings).lower(
+            param_shapes, batch_specs)

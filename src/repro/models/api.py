@@ -1,0 +1,267 @@
+"""Unified model API: init / forward / loss / decode dispatch by family.
+
+This is the surface the launcher, dry-run, tests, and examples use:
+  init_params(cfg, key)            -> params pytree
+  forward(cfg, params, batch)      -> logits
+  loss_fn(cfg, params, batch)      -> (loss, metrics)
+  decode_step(cfg, params, batch)  -> (logits, new_cache)
+  cache_specs(cfg, batch, max_len) -> ShapeDtypeStruct pytree
+  count_params(cfg)                -> int (for 6·N·D roofline term)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tf_mod
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return tf_mod.init_lm(key, cfg)
+    if cfg.family == "ssm":
+        return _init_ssm_lm(key, cfg)
+    if cfg.family == "hybrid":
+        return hybrid_mod.init_hybrid(key, cfg)
+    if cfg.family == "encdec":
+        return encdec_mod.init_encdec(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def _init_ssm_lm(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    dt = cfg.jnp_dtype
+    return {
+        "embed": cm.init_embedding(ks[1], cfg.vocab, cfg.d_model, dt),
+        "mamba_layers": jax.vmap(
+            lambda k: dict(norm=cm.init_rmsnorm(cfg.d_model, dt),
+                           block=ssm_mod.init_mamba2(k, cfg)))(layer_keys),
+        "final_norm": cm.init_rmsnorm(cfg.d_model, dt),
+    }
+
+
+def _ssm_hidden(params, cfg: ArchConfig, tokens):
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+
+    def body(carry, layer):
+        h = cm.rms_norm(layer["norm"], carry, cfg.norm_eps)
+        return carry + ssm_mod.mamba2_forward(layer["block"], h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["mamba_layers"])
+    else:
+        n = cfg.n_layers
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], params["mamba_layers"]))
+    return cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ArchConfig, params, batch):
+    """Full-sequence forward -> (logits [B, S, V], aux dict)."""
+    tokens = batch["tokens"]
+    if cfg.family in ("dense", "moe"):
+        return tf_mod.lm_forward(params, cfg, tokens)
+    if cfg.family == "vlm":
+        return tf_mod.lm_forward(params, cfg, tokens,
+                                 prefix_embeds=batch["patch_embeds"])
+    if cfg.family == "ssm":
+        hidden = _ssm_hidden(params, cfg, tokens)
+        return cm.unembed(params["embed"], hidden), {}
+    if cfg.family == "hybrid":
+        return hybrid_mod.hybrid_forward(params, cfg, tokens), {}
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_forward(params, cfg, tokens,
+                                         batch["frame_embeds"]), {}
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    """Next-token CE (+ MoE load balance + MTP aux).  Returns (loss, metrics)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    if cfg.family in ("dense", "moe", "vlm") and cfg.mtp_depth:
+        prefix = batch.get("patch_embeds") if cfg.family == "vlm" else None
+        hidden, aux = tf_mod.lm_hidden(params, cfg, tokens, prefix_embeds=prefix)
+        logits = tf_mod.lm_logits(params, cfg, hidden)
+    else:
+        logits, aux = forward(cfg, params, batch)
+        hidden = None
+    if cfg.onehot_loss:
+        # vocab-sharded CE: logsumexp + one-hot contraction partition over
+        # the vocab shards with a scalar all-reduce — no [B,S,V] gather
+        lg = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        onehot = jax.nn.one_hot(labels, lg.shape[-1], dtype=lg.dtype)
+        lab_logit = jnp.einsum("bsv,bsv->bs", lg, onehot)
+        nll = logz - lab_logit
+    else:
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    metrics = {"ce_loss": loss}
+    if aux.get("load_balance_loss") is not None and cfg.n_experts:
+        lb = aux["load_balance_loss"] * 0.01
+        loss = loss + lb
+        metrics["load_balance_loss"] = lb
+    if cfg.mtp_depth and hidden is not None:
+        # MTP: logits at position t predict labels[t+1] (== tokens[t+2])
+        mtp_lg = tf_mod.mtp_logits(params, cfg, hidden, tokens)
+        mtp_labels = labels[:, 1:]
+        mlp_logp = jax.nn.log_softmax(mtp_lg.astype(jnp.float32), axis=-1)
+        mtp_nll = -jnp.take_along_axis(
+            mlp_logp, mtp_labels[..., None], axis=-1)[..., 0]
+        mtp_loss = 0.3 * jnp.mean(mtp_nll)
+        loss = loss + mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.family in ("dense", "moe"):
+        return tf_mod.lm_cache_specs(cfg, batch, max_len)
+    if cfg.family == "vlm":
+        return tf_mod.lm_cache_specs(cfg, batch, max_len + cfg.n_image_tokens)
+    if cfg.family == "ssm":
+        one = ssm_mod.mamba2_cache_specs(cfg, batch)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_layers, *s.shape), s.dtype), one)
+    if cfg.family == "hybrid":
+        return hybrid_mod.hybrid_cache_specs(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_cache_specs(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    def mk(s):
+        if s.dtype == jnp.int32:
+            return -jnp.ones(s.shape, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(mk, cache_specs(cfg, batch, max_len))
+
+
+def decode_step(cfg: ArchConfig, params, batch):
+    """batch: tokens [B,1], pos [B], cache -> (logits [B,1,V], new cache)."""
+    tokens, pos, cache = batch["tokens"], batch["pos"], batch["cache"]
+    if cfg.family in ("dense", "moe", "vlm"):
+        return tf_mod.lm_decode_step(params, cfg, tokens, pos, cache)
+    if cfg.family == "ssm":
+        return _ssm_decode(params, cfg, tokens, cache)
+    if cfg.family == "hybrid":
+        return hybrid_mod.hybrid_decode_step(params, cfg, tokens, pos, cache)
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_decode_step(params, cfg, tokens, pos, cache)
+    raise ValueError(cfg.family)
+
+
+def _ssm_decode(params, cfg: ArchConfig, tokens, cache):
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+
+    def body(carry, inp):
+        layer, lc = inp
+        h = cm.rms_norm(layer["norm"], carry, cfg.norm_eps)
+        d, nc = ssm_mod.mamba2_decode(layer["block"], h, cfg, lc)
+        return carry + d, nc
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, (params["mamba_layers"], cache))
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            layer = jax.tree.map(lambda t: t[i], params["mamba_layers"])
+            lc = jax.tree.map(lambda t: t[i], cache)
+            x, nc = body(x, (layer, lc))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+    x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return cm.unembed(params["embed"], x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# deployment binarization (the paper's technique, model-wide)
+# ---------------------------------------------------------------------------
+
+# routers/embeddings/SSM dynamics stay fp (DESIGN.md §5); MLA wuk/wuv stay fp
+# because the absorbed decode form consumes the explicit factors (tiny mats).
+BINARIZE_EXCLUDE = ("router", "embed", "unembed", "conv_", "A_log",
+                    "dt_bias", "norm", "wuk", "wuv")
+
+
+def binarize_model_params(cfg: ArchConfig, params, *, qc=None):
+    """Convert every eligible linear's fp weights to packed-binary form.
+
+    Eligible = dict leaves holding a 2D 'w' under a path not excluded in
+    BINARIZE_EXCLUDE (DESIGN.md §5: routers/embeddings/SSM dynamics stay fp).
+    Works under jit AND eval_shape (dry-run lowering of the binary serve
+    path).  Stacked-layer weights ([L, K, N]) are vmapped over the stack.
+    """
+    from repro.core import binlinear as bl
+
+    qc = qc or cfg.quant
+
+    def convert(path, subtree):
+        if not isinstance(subtree, dict):
+            return subtree
+        pstr = "/".join(str(p) for p in path)
+        if any(e in pstr for e in BINARIZE_EXCLUDE):
+            return {k: convert(path + (k,), v) for k, v in subtree.items()}
+        w = subtree.get("w")
+        if w is not None and hasattr(w, "ndim"):
+            if w.ndim == 2:
+                return bl.binarize_params(subtree, qc)
+            if w.ndim == 3:  # stacked layers [L, K, N]
+                stacked = jax.vmap(
+                    lambda wi: bl.binarize_params({"w": wi}, qc))( w)
+                if "b" in subtree:
+                    stacked["b"] = subtree["b"]
+                return stacked
+        return {k: convert(path + (k,), v) for k, v in subtree.items()}
+
+    return convert((), params)
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _param_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    specs = _param_specs(cfg)
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs))
+    if not active_only or not cfg.n_experts:
+        return total
+    # active = total - (inactive routed experts' weights)
+    n_main = cfg.n_layers - cfg.n_dense_layers
+    F = cfg.d_ff_expert or cfg.d_ff
+    per_expert = 3 * cfg.d_model * F  # gate, up, down
+    inactive = n_main * (cfg.n_experts - cfg.top_k) * per_expert
+    return total - inactive

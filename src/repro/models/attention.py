@@ -1,0 +1,291 @@
+"""Attention variants: GQA/MQA (+qk-norm, sliding window, softcap), MLA.
+
+Decode uses an explicit KV cache:
+  * full attention: cache [B, S_max, kv, hd] with validity mask slot <= pos.
+  * sliding window: rolling cache [B, W, kv, hd] + per-slot global positions
+    (sub-quadratic long-context decode; the long_500k path for SWA archs).
+  * MLA: latent cache [B, S_max, kv_lora + rope_dim] — the DeepSeek trick;
+    decode uses the absorbed form (queries projected into latent space).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ArchConfig):
+    hd = cfg.resolved_head_dim
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": cm.init_linear(ks[0], cfg.d_model, cfg.n_heads * hd, dt, bias=cfg.qkv_bias),
+        "wk": cm.init_linear(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dt, bias=cfg.qkv_bias),
+        "wv": cm.init_linear(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dt, bias=cfg.qkv_bias),
+        "wo": cm.init_linear(ks[3], cfg.n_heads * hd, cfg.d_model, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = cm.init_rmsnorm(hd, dt)
+        p["k_norm"] = cm.init_rmsnorm(hd, dt)
+    return p
+
+
+def _project_qkv(params, x, cfg: ArchConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = cm.linear(params["wq"], x, cfg.quant).reshape(B, S, cfg.n_heads, hd)
+    k = cm.linear(params["wk"], x, cfg.quant).reshape(B, S, cfg.n_kv_heads, hd)
+    v = cm.linear(params["wv"], x, cfg.quant).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = cm.rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = cm.rms_norm(params["k_norm"], k, cfg.norm_eps)
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg: ArchConfig):
+    """q [B,Sq,H,hd], k [B,Sk,kv,hd] -> logits [B, H, Sq, Sk] (fp32).
+
+    Inputs stay in their storage dtype (bf16); the contraction accumulates
+    in fp32 on the MXU (preferred_element_type).  Keeping the operands bf16
+    keeps the *cotangents* bf16 too — fp32-cast inputs made every backward
+    dX partial-sum all-reduce fp32 and unfusable (2x wire + HBM bytes;
+    EXPERIMENTS.md §Perf cell C).
+    """
+    B, Sq, H, hd = q.shape
+    kv = k.shape[2]
+    g = H // kv
+    qr = q.reshape(B, Sq, kv, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qr, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    return logits.reshape(B, H, Sq, -1)
+
+
+def _gqa_out(weights, v, cfg: ArchConfig):
+    """weights [B,H,Sq,Sk] (fp32), v [B,Sk,kv,hd] -> [B,Sq,H*hd]."""
+    B, H, Sq, Sk = weights.shape
+    kv = v.shape[2]
+    g = H // kv
+    w = weights.reshape(B, kv, g, Sq, Sk).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H * v.shape[-1])
+
+
+def attn_forward(params, x, cfg: ArchConfig, *, positions=None, mask=None):
+    """Full-sequence (train/prefill) attention.  x: [B, S, D].
+
+    cfg.attn_chunk: query-chunked (flash-style) evaluation — the S x S score
+    tensor is never materialized; peak score memory drops by S/chunk.
+    Chunks are an unrolled python loop (NOT lax.scan) so the dry-run cost
+    analysis counts every chunk (see launch/dryrun._depth_pair).
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    q = cm.shard(q, "batch", None, "heads", None)
+    k = cm.shard(k, "batch", None, "kv_heads", None)
+    v = cm.shard(v, "batch", None, "kv_heads", None)
+    if mask is None:
+        mask = cm.causal_mask(S, cfg.sliding_window)
+    c = cfg.attn_chunk
+    if c and S > c and S % c == 0:
+        outs = []
+        for i in range(S // c):
+            qi = q[:, i * c: (i + 1) * c]
+            mi = mask[i * c: (i + 1) * c]
+            # causality: keys beyond the chunk's last query never attend
+            k_hi = (i + 1) * c
+            logits = _gqa_scores(qi, k[:, :k_hi], cfg)
+            logits = jnp.where(mi[None, None, :, :k_hi], logits, NEG_INF)
+            w = jax.nn.softmax(logits, axis=-1)
+            outs.append(_gqa_out(w, v[:, :k_hi], cfg))
+        o = jnp.concatenate(outs, axis=1).astype(x.dtype)
+    else:
+        logits = _gqa_scores(q, k, cfg)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        weights = jax.nn.softmax(logits, axis=-1)
+        o = _gqa_out(weights, v, cfg).astype(x.dtype)
+    return cm.linear(params["wo"], o, cfg.quant)
+
+
+# --- decode ---------------------------------------------------------------
+
+def attn_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    dt = cfg.jnp_dtype
+    spec = {
+        "k": jax.ShapeDtypeStruct((batch, W, cfg.n_kv_heads, hd), dt),
+        "v": jax.ShapeDtypeStruct((batch, W, cfg.n_kv_heads, hd), dt),
+    }
+    if cfg.sliding_window:
+        spec["slot_pos"] = jax.ShapeDtypeStruct((batch, W), jnp.int32)
+    return spec
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype)
+        if s.dtype != jnp.int32 else -jnp.ones(s.shape, jnp.int32),
+        attn_cache_specs(cfg, batch, max_len),
+    )
+
+
+def attn_decode(params, x, cfg: ArchConfig, cache, pos):
+    """One-token decode.  x: [B, 1, D], pos: [B] int32 -> (y, new_cache)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, x, cfg, pos[:, None])
+    W = cache["k"].shape[1]
+    slot = (pos % W) if cfg.sliding_window else pos
+    bidx = jnp.arange(B)
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0])
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0])
+    new_cache = dict(cache, k=new_k, v=new_v)
+    if cfg.sliding_window:
+        slot_pos = cache["slot_pos"].at[bidx, slot].set(pos)
+        new_cache["slot_pos"] = slot_pos
+        valid = (slot_pos >= 0) & (slot_pos <= pos[:, None]) & (
+            pos[:, None] - slot_pos < cfg.sliding_window
+        )
+    else:
+        valid = jnp.arange(W)[None, :] <= pos[:, None]
+    logits = _gqa_scores(q, new_k, cfg)                       # [B, H, 1, W]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    weights = jax.nn.softmax(logits, axis=-1)
+    o = _gqa_out(weights, new_v, cfg).astype(x.dtype)
+    return cm.linear(params["wo"], o, cfg.quant), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig):
+    dt = cfg.jnp_dtype
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim
+    r = cfg.qk_rope_dim
+    vd = cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.q_lora_rank:
+        p["wdq"] = cm.init_linear(ks[0], cfg.d_model, cfg.q_lora_rank, dt)
+        p["q_norm"] = cm.init_rmsnorm(cfg.q_lora_rank, dt)
+        p["wuq"] = cm.init_linear(ks[1], cfg.q_lora_rank, H * (qk + r), dt)
+    else:
+        p["wq"] = cm.init_linear(ks[1], cfg.d_model, H * (qk + r), dt)
+    p["wdkv"] = cm.init_linear(ks[2], cfg.d_model, cfg.kv_lora_rank + r, dt)
+    p["kv_norm"] = cm.init_rmsnorm(cfg.kv_lora_rank, dt)
+    p["wuk"] = cm.init_linear(ks[3], cfg.kv_lora_rank, H * qk, dt)
+    p["wuv"] = cm.init_linear(ks[4], cfg.kv_lora_rank, H * vd, dt)
+    p["wo"] = cm.init_linear(ks[5], H * vd, cfg.d_model, dt)
+    return p
+
+
+def _mla_queries(params, x, cfg: ArchConfig, positions):
+    B, S, _ = x.shape
+    H, qk, r = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = cm.rms_norm(params["q_norm"],
+                         cm.linear(params["wdq"], x, cfg.quant), cfg.norm_eps)
+        q = cm.linear(params["wuq"], cq, cfg.quant)
+    else:
+        q = cm.linear(params["wq"], x, cfg.quant)
+    q = q.reshape(B, S, H, qk + r)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(params, x, cfg: ArchConfig, positions):
+    """c_kv [B,S,rank] (normed), k_rope [B,S,r] (shared across heads)."""
+    r = cfg.qk_rope_dim
+    dkv = cm.linear(params["wdkv"], x, cfg.quant)
+    c_kv = cm.rms_norm(params["kv_norm"], dkv[..., : cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = cm.apply_rope(dkv[..., cfg.kv_lora_rank:][:, :, None, :],
+                           positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(params, x, cfg: ArchConfig, *, positions=None, mask=None):
+    """Train/prefill MLA: materialize per-head k/v from the latent."""
+    B, S, _ = x.shape
+    H, qk, r, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_queries(params, x, cfg, positions)
+    c_kv, k_rope = _mla_latents(params, x, cfg, positions)
+    k_nope = cm.linear(params["wuk"], c_kv, cfg.quant).reshape(B, S, H, qk)
+    v = cm.linear(params["wuv"], c_kv, cfg.quant).reshape(B, S, H, vd)
+    scale = 1.0 / jnp.sqrt(qk + r).astype(jnp.float32)
+    # bf16 operands, fp32 accumulation (see _gqa_scores)
+    logits = (
+        jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    if mask is None:
+        mask = cm.causal_mask(S)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqs,bshd->bqhd", w, v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, S, H * vd).astype(x.dtype)
+    return cm.linear(params["wo"], o, cfg.quant)
+
+
+def mla_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    dt = cfg.jnp_dtype
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dt),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim), dt),
+    }
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        mla_cache_specs(cfg, batch, max_len))
+
+
+def mla_decode(params, x, cfg: ArchConfig, cache, pos):
+    """Absorbed-form decode: scores/outputs computed in latent space, so the
+    per-token cache is kv_lora_rank + rope_dim floats — the MLA memory win."""
+    B = x.shape[0]
+    H, qk, r, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_queries(params, x, cfg, pos[:, None])   # [B,1,H,*]
+    c_new, k_rope_new = _mla_latents(params, x, cfg, pos[:, None])
+    bidx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[bidx, pos].set(c_new[:, 0])
+    k_rope = cache["k_rope"].at[bidx, pos].set(k_rope_new[:, 0])
+    # absorb W_uk into the query:  q_lat[b,h,rank] = q_nope · W_uk[rank, h, qk]
+    wuk = params["wuk"]["w"].astype(jnp.float32).reshape(rank, H, qk)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), wuk)
+    scale = 1.0 / jnp.sqrt(qk + r).astype(jnp.float32)
+    logits = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, c_kv.astype(jnp.float32))
+        + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) * scale
+    S = c_kv.shape[1]
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w, c_kv.astype(jnp.float32))
+    wuv = params["wuv"]["w"].astype(jnp.float32).reshape(rank, H, vd)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, wuv).reshape(B, 1, H * vd)
+    y = cm.linear(params["wo"], o.astype(x.dtype), cfg.quant)
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,138 @@
+"""The paper's own evaluation networks (§V-A1).
+
+  * CNN-A: 2 conv (5@7x7x3, 150@4x4x5) + 3 dense (1350->340->490->43), GTSRB.
+  * CNN-B: MobileNetV1 (depth multiplier alpha, resolution rho), ImageNet.
+
+Both are built from the quantizable conv/linear so they run dense (fp
+baseline), fake-quant (retraining), or packed-binary (deployment) — exactly
+the paper's evaluation axes in Table II.  The max-pool layers use the fused
+AMU epilogue.  Depth-wise layers of MobileNet are approximated channel-wise
+(paper §V-A1: "a single convolution filter").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binconv
+from repro.core import binlinear as bl
+from repro.core.binlinear import QuantConfig, DENSE
+from repro.models import common as cm
+
+# ---------------------------------------------------------------------------
+# CNN-A (paper: 9M MACs, GTSRB 43 classes, input 48x48x3)
+# ---------------------------------------------------------------------------
+
+CNN_A_INPUT = (48, 48, 3)
+CNN_A_CLASSES = 43
+
+
+def init_cnn_a(key, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+
+    def conv(k, kh, kw, cin, cout):
+        s = 1.0 / jnp.sqrt(kh * kw * cin)
+        return {"w": (jax.random.normal(k, (kh, kw, cin, cout)) * s).astype(dtype),
+                "b": jnp.zeros((cout,), dtype)}
+
+    return {
+        "conv1": conv(ks[0], 7, 7, 3, 5),
+        "conv2": conv(ks[1], 4, 4, 5, 150),
+        "fc1": dict(bl.init_linear(ks[2], 1350, 340, dtype), b=jnp.zeros((340,), dtype)),
+        "fc2": dict(bl.init_linear(ks[3], 340, 490, dtype), b=jnp.zeros((490,), dtype)),
+        "fc3": dict(bl.init_linear(ks[4], 490, 43, dtype), b=jnp.zeros((43,), dtype)),
+    }
+
+
+def cnn_a_forward(params, x: jax.Array, quant: QuantConfig = DENSE) -> jax.Array:
+    """x: [B, 48, 48, 3] -> logits [B, 43].
+
+    conv1 7x7 VALID -> 42x42x5, AMU pool 2 -> 21x21x5
+    conv2 4x4 VALID -> 18x18x150, AMU pool 6 -> 3x3x150 = 1350
+    """
+    y = binconv.conv2d(params["conv1"], x, quant=quant)
+    y = binconv.relu_maxpool(y, 2)
+    y = binconv.conv2d(params["conv2"], y, quant=quant)
+    y = binconv.relu_maxpool(y, 6)
+    y = y.reshape(y.shape[0], -1)
+    y = jax.nn.relu(bl.apply_linear(params["fc1"], y, quant))
+    y = jax.nn.relu(bl.apply_linear(params["fc2"], y, quant))
+    return bl.apply_linear(params["fc3"], y, quant)
+
+
+def binarize_cnn_a(params, quant: QuantConfig):
+    """Offline conversion of every layer to packed-binary deployment form."""
+    out = {}
+    for name in ("conv1", "conv2"):
+        out[name] = binconv.binarize_conv_params(params[name], quant)
+    for name in ("fc1", "fc2", "fc3"):
+        out[name] = bl.binarize_params(params[name], quant)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV1 (CNN-B1: alpha=0.5 rho=0.57 @128; CNN-B2: alpha=1 rho=1 @224)
+# ---------------------------------------------------------------------------
+
+MOBILENET_BLOCKS = [
+    # (stride, out_channels) after the stem; standard MobileNetV1
+    (1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
+    (1, 512), (1, 512), (1, 512), (1, 512), (1, 512), (2, 1024), (1, 1024),
+]
+
+
+def init_mobilenet(key, *, width_mult: float = 1.0, n_classes: int = 1000,
+                   dtype=jnp.float32):
+    def c(ch):
+        return max(8, int(ch * width_mult))
+
+    ks = jax.random.split(key, 2 + 2 * len(MOBILENET_BLOCKS))
+    params = {"stem": {
+        "w": (jax.random.normal(ks[0], (3, 3, 3, c(32))) * 0.1).astype(dtype),
+        "b": jnp.zeros((c(32),), dtype)}}
+    cin = c(32)
+    for i, (stride, cout) in enumerate(MOBILENET_BLOCKS):
+        cout = c(cout)
+        kd, kp = ks[1 + 2 * i], ks[2 + 2 * i]
+        params[f"dw{i}"] = {
+            "w": (jax.random.normal(kd, (3, 3, cin, 1)) * 0.1).astype(dtype),
+            "b": jnp.zeros((cin,), dtype)}
+        params[f"pw{i}"] = {
+            "w": (jax.random.normal(kp, (1, 1, cin, cout)) * (1.0 / jnp.sqrt(cin))
+                  ).astype(dtype),
+            "b": jnp.zeros((cout,), dtype)}
+        cin = cout
+    params["head"] = dict(
+        bl.init_linear(ks[-1], cin, n_classes, dtype),
+        b=jnp.zeros((n_classes,), dtype))
+    return params
+
+
+def _depthwise(params, x, stride):
+    """Depth-wise 3x3 (channel-wise binary approx: single filter/channel)."""
+    y = jax.lax.conv_general_dilated(
+        x, params["w"].astype(x.dtype),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1])
+    return y + params["b"].astype(y.dtype)
+
+
+def mobilenet_forward(params, x: jax.Array, quant: QuantConfig = DENSE):
+    """x: [B, R, R, 3] -> logits.  Point-wise convs carry the binary matmuls;
+    depth-wise convs are memory-bound (paper §V-A3: D_arch=1 there)."""
+    y = binconv.conv2d(params["stem"], x, stride=2, padding="SAME", quant=quant)
+    y = jax.nn.relu(y)
+    for i, (stride, _) in enumerate(MOBILENET_BLOCKS):
+        y = jax.nn.relu(_depthwise(params[f"dw{i}"], y, stride))
+        y = jax.nn.relu(binconv.conv2d(params[f"pw{i}"], y, quant=quant))
+    y = jnp.mean(y, axis=(1, 2))  # global average pool (offloaded to CPU in paper)
+    return bl.apply_linear(params["head"], y, quant)
+
+
+def cnn_a_macs() -> int:
+    """Analytic MAC count — paper says ~9M for CNN-A."""
+    m_conv1 = 42 * 42 * 5 * 7 * 7 * 3
+    m_conv2 = 18 * 18 * 150 * 4 * 4 * 5
+    m_fc = 1350 * 340 + 340 * 490 + 490 * 43
+    return m_conv1 + m_conv2 + m_fc

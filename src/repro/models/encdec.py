@@ -1,0 +1,200 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``frame_embeds``
+([B, T_enc, D], precomputed) arrive as inputs.  Encoder: bidirectional
+self-attention with fixed sinusoidal positions.  Decoder: causal
+self-attention + cross-attention to encoder output.  Decode caches the
+decoder self-KV plus the (static) cross K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import ffn as ffn_mod
+
+
+def _init_cross_attn(key, cfg: ArchConfig):
+    return attn.init_attn(key, cfg)  # same projection structure
+
+
+def init_encdec(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    dt = cfg.jnp_dtype
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": cm.init_rmsnorm(cfg.d_model, dt),
+            "ln2": cm.init_rmsnorm(cfg.d_model, dt),
+            "attn": attn.init_attn(k1, cfg),
+            "ffn": ffn_mod.init_ffn(k2, cfg),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": cm.init_rmsnorm(cfg.d_model, dt),
+            "ln_x": cm.init_rmsnorm(cfg.d_model, dt),
+            "ln2": cm.init_rmsnorm(cfg.d_model, dt),
+            "attn": attn.init_attn(k1, cfg),
+            "xattn": _init_cross_attn(k2, cfg),
+            "ffn": ffn_mod.init_ffn(k3, cfg),
+        }
+
+    enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": cm.init_embedding(ks[2], cfg.vocab, cfg.d_model, dt),
+        "enc_layers": jax.vmap(enc_layer)(enc_keys),
+        "enc_norm": cm.init_rmsnorm(cfg.d_model, dt),
+        "dec_layers": jax.vmap(dec_layer)(dec_keys),
+        "final_norm": cm.init_rmsnorm(cfg.d_model, dt),
+    }
+
+
+def _cross_attend(params, x, enc_kv, cfg: ArchConfig):
+    """x: [B, Sq, D] queries; enc_kv = (k, v): [B, Se, kv, hd]."""
+    B, Sq, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = cm.linear(params["wq"], x, cfg.quant).reshape(B, Sq, cfg.n_heads, hd)
+    k, v = enc_kv
+    logits = attn._gqa_scores(q, k, cfg)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = attn._gqa_out(w, v, cfg).astype(x.dtype)
+    return cm.linear(params["wo"], o, cfg.quant)
+
+
+def _enc_kv(params, enc_out, cfg: ArchConfig):
+    B, Se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = cm.linear(params["wk"], enc_out, cfg.quant).reshape(B, Se, cfg.n_kv_heads, hd)
+    v = cm.linear(params["wv"], enc_out, cfg.quant).reshape(B, Se, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def encode(params, cfg: ArchConfig, frame_embeds):
+    """frame_embeds: [B, Se, D] (stub frontend output) -> encoder states."""
+    B, Se, D = frame_embeds.shape
+    x = frame_embeds.astype(cfg.jnp_dtype) + cm.sinusoidal_positions(
+        Se, D).astype(cfg.jnp_dtype)[None]
+    mask = jnp.ones((Se, Se), bool)  # bidirectional
+    positions = jnp.arange(Se)[None, :]
+
+    def body(carry, layer):
+        h = cm.rms_norm(layer["ln1"], carry, cfg.norm_eps)
+        carry = carry + attn.attn_forward(layer["attn"], h, cfg,
+                                          positions=positions, mask=mask)
+        h = cm.rms_norm(layer["ln2"], carry, cfg.norm_eps)
+        carry = carry + ffn_mod.ffn_forward(layer["ffn"], h, cfg)
+        return carry, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        n = jax.tree.leaves(params["enc_layers"])[0].shape[0]
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], params["enc_layers"]))
+    return cm.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def encdec_forward(params, cfg: ArchConfig, tokens, frame_embeds):
+    """Teacher-forced full-sequence forward -> logits [B, S, V]."""
+    enc_out = encode(params, cfg, frame_embeds)
+    B, S = tokens.shape
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    positions = jnp.arange(S)[None, :]
+    mask = cm.causal_mask(S)
+
+    def body(carry, layer):
+        h = cm.rms_norm(layer["ln1"], carry, cfg.norm_eps)
+        carry = carry + attn.attn_forward(layer["attn"], h, cfg,
+                                          positions=positions, mask=mask)
+        h = cm.rms_norm(layer["ln_x"], carry, cfg.norm_eps)
+        carry = carry + _cross_attend(layer["xattn"], h,
+                                      _enc_kv(layer["xattn"], enc_out, cfg), cfg)
+        h = cm.rms_norm(layer["ln2"], carry, cfg.norm_eps)
+        carry = carry + ffn_mod.ffn_forward(layer["ffn"], h, cfg)
+        return carry, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    else:
+        n = jax.tree.leaves(params["dec_layers"])[0].shape[0]
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], params["dec_layers"]))
+    x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    from repro.models.transformer import lm_logits
+
+    table = params["embed"]
+    return cm.softcap(cm.unembed(table, x), cfg.logit_softcap)
+
+
+def encdec_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    dt = cfg.jnp_dtype
+    n = cfg.n_layers
+    self_spec = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype),
+        attn.attn_cache_specs(cfg, batch, max_len))
+    cross = jax.ShapeDtypeStruct((n, batch, cfg.encoder_len, cfg.n_kv_heads, hd), dt)
+    return {"self": self_spec, "cross_k": cross, "cross_v": cross}
+
+
+def init_encdec_cache(params, cfg: ArchConfig, batch: int, max_len: int,
+                      frame_embeds=None):
+    spec = encdec_cache_specs(cfg, batch, max_len)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+    if frame_embeds is not None:
+        enc_out = encode(params, cfg, frame_embeds)
+        n = cfg.n_layers
+        ks, vs = [], []
+        for i in range(n):
+            layer = jax.tree.map(lambda t: t[i], params["dec_layers"])
+            k, v = _enc_kv(layer["xattn"], enc_out, cfg)
+            ks.append(k)
+            vs.append(v)
+        cache["cross_k"] = jnp.stack(ks)
+        cache["cross_v"] = jnp.stack(vs)
+    return cache
+
+
+def encdec_decode_step(params, cfg: ArchConfig, tokens, pos, cache):
+    """tokens [B,1], pos [B]; cross K/V precomputed in cache."""
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+
+    def body(carry, inp):
+        layer, self_cache, ck, cv = inp
+        h = cm.rms_norm(layer["ln1"], carry, cfg.norm_eps)
+        a, new_self = attn.attn_decode(layer["attn"], h, cfg, self_cache, pos)
+        carry = carry + a
+        h = cm.rms_norm(layer["ln_x"], carry, cfg.norm_eps)
+        carry = carry + _cross_attend(layer["xattn"], h, (ck, cv), cfg)
+        h = cm.rms_norm(layer["ln2"], carry, cfg.norm_eps)
+        carry = carry + ffn_mod.ffn_forward(layer["ffn"], h, cfg)
+        return carry, new_self
+
+    if cfg.scan_layers:
+        x, new_self = jax.lax.scan(
+            body, x,
+            (params["dec_layers"], cache["self"], cache["cross_k"], cache["cross_v"]))
+    else:
+        n = cfg.n_layers
+        outs = []
+        for i in range(n):
+            inp = jax.tree.map(lambda t: t[i],
+                               (params["dec_layers"], cache["self"],
+                                cache["cross_k"], cache["cross_v"]))
+            x, ns = body(x, inp)
+            outs.append(ns)
+        new_self = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+    x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = cm.softcap(cm.unembed(params["embed"], x), cfg.logit_softcap)
+    return logits, dict(cache, self=new_self)

@@ -1,0 +1,36 @@
+"""Dense FFN blocks: SwiGLU / GeGLU / GELU-MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+
+
+def init_ffn(key, cfg: ArchConfig, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": cm.init_linear(ks[0], cfg.d_model, d_ff, dt),
+            "w_up": cm.init_linear(ks[1], cfg.d_model, d_ff, dt),
+            "w_down": cm.init_linear(ks[2], d_ff, cfg.d_model, dt),
+        }
+    return {
+        "w_up": cm.init_linear(ks[0], cfg.d_model, d_ff, dt),
+        "w_down": cm.init_linear(ks[1], d_ff, cfg.d_model, dt),
+    }
+
+
+def ffn_forward(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    q = cfg.quant
+    if "w_gate" in params:
+        act = jax.nn.silu if cfg.activation == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(cm.linear(params["w_gate"], x, q)) * cm.linear(params["w_up"], x, q)
+    else:
+        h = jax.nn.gelu(cm.linear(params["w_up"], x, q), approximate=True)
+    h = cm.shard(h, "batch", None, "ff")
+    return cm.linear(params["w_down"], h, q)

@@ -1,0 +1,162 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+Faithful structure (arXiv:2411.15242): the backbone is a stack of Mamba2
+blocks; every ``hybrid_attn_every`` blocks, a single shared
+attention+MLP block (one set of parameters, reused at every application
+point) processes concat(current hidden, original embedding) projected back
+to d_model.  Each application point keeps its own KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+
+
+def n_attn_points(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+def init_hybrid(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    dt = cfg.jnp_dtype
+    mamba_keys = jax.random.split(ks[0], cfg.n_layers)
+    k1, k2 = jax.random.split(ks[1])
+    return {
+        "embed": cm.init_embedding(ks[2], cfg.vocab, cfg.d_model, dt),
+        "mamba_layers": jax.vmap(
+            lambda k: dict(norm=cm.init_rmsnorm(cfg.d_model, dt),
+                           block=ssm_mod.init_mamba2(k, cfg)))(mamba_keys),
+        "shared": {
+            "in_proj": cm.init_linear(ks[3], 2 * cfg.d_model, cfg.d_model, dt),
+            "ln1": cm.init_rmsnorm(cfg.d_model, dt),
+            "ln2": cm.init_rmsnorm(cfg.d_model, dt),
+            "attn": attn.init_attn(k1, cfg),
+            "ffn": ffn_mod.init_ffn(k2, cfg),
+        },
+        "final_norm": cm.init_rmsnorm(cfg.d_model, dt),
+    }
+
+
+def _shared_block(shared, x, x0, cfg: ArchConfig, *, positions, mask):
+    h = cm.linear(shared["in_proj"],
+                  jnp.concatenate([x, x0], axis=-1), cfg.quant)
+    a = attn.attn_forward(shared["attn"],
+                          cm.rms_norm(shared["ln1"], h, cfg.norm_eps),
+                          cfg, positions=positions, mask=mask)
+    h = h + a
+    f = ffn_mod.ffn_forward(shared["ffn"],
+                            cm.rms_norm(shared["ln2"], h, cfg.norm_eps), cfg)
+    return x + h + f
+
+
+def hybrid_hidden(params, cfg: ArchConfig, tokens):
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    x0 = x
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mask = cm.causal_mask(S, cfg.sliding_window)
+    every = cfg.hybrid_attn_every
+
+    def body(carry, inp):
+        i, layer = inp
+        h = cm.rms_norm(layer["norm"], carry, cfg.norm_eps)
+        carry = carry + ssm_mod.mamba2_forward(layer["block"], h, cfg)
+        carry = jax.lax.cond(
+            (i + 1) % every == 0,
+            lambda c: _shared_block(params["shared"], c, x0, cfg,
+                                    positions=positions, mask=mask),
+            lambda c: c,
+            carry,
+        )
+        return carry, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, (idx, params["mamba_layers"]))
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = body(x, (jnp.int32(i),
+                            jax.tree.map(lambda t: t[i], params["mamba_layers"])))
+    return cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def hybrid_forward(params, cfg: ArchConfig, tokens):
+    hidden = hybrid_hidden(params, cfg, tokens)
+    return cm.unembed(params["embed"], hidden)
+
+
+# --- decode -----------------------------------------------------------------
+
+def hybrid_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    n_pts = n_attn_points(cfg)
+    attn_one = attn.attn_cache_specs(cfg, batch, max_len)
+    mamba_one = ssm_mod.mamba2_cache_specs(cfg, batch)
+    return {
+        "mamba": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_layers, *s.shape), s.dtype),
+            mamba_one),
+        "attn": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_pts, *s.shape), s.dtype), attn_one),
+        "x0": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), cfg.jnp_dtype),
+    }
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, max_len: int):
+    def mk(s):
+        if s.dtype == jnp.int32:
+            return -jnp.ones(s.shape, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(mk, hybrid_cache_specs(cfg, batch, max_len))
+
+
+def _shared_block_decode(shared, x, x0, cfg: ArchConfig, cache, pos):
+    h = cm.linear(shared["in_proj"],
+                  jnp.concatenate([x, x0], axis=-1), cfg.quant)
+    a, new_cache = attn.attn_decode(
+        shared["attn"], cm.rms_norm(shared["ln1"], h, cfg.norm_eps),
+        cfg, cache, pos)
+    h = h + a
+    f = ffn_mod.ffn_forward(shared["ffn"],
+                            cm.rms_norm(shared["ln2"], h, cfg.norm_eps), cfg)
+    return x + h + f, new_cache
+
+
+def hybrid_decode_step(params, cfg: ArchConfig, tokens, pos, cache):
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    x0 = x
+    every = cfg.hybrid_attn_every
+    n_pts = n_attn_points(cfg)
+    new_mamba = []
+    attn_cache = cache["attn"]
+    # unrolled decode over layers (cond-in-scan with per-point cache indexing
+    # is messier than the win; n_layers is static)
+    for i in range(cfg.n_layers):
+        layer = jax.tree.map(lambda t: t[i], params["mamba_layers"])
+        mcache = jax.tree.map(lambda t: t[i], cache["mamba"])
+        h = cm.rms_norm(layer["norm"], x, cfg.norm_eps)
+        d, nm = ssm_mod.mamba2_decode(layer["block"], h, cfg, mcache)
+        x = x + d
+        new_mamba.append(nm)
+        if (i + 1) % every == 0 and (i + 1) // every <= n_pts:
+            p_idx = (i + 1) // every - 1
+            acache = jax.tree.map(lambda t: t[p_idx], attn_cache)
+            x, na = _shared_block_decode(params["shared"], x, x0, cfg, acache, pos)
+            attn_cache = jax.tree.map(
+                lambda full, new: full.at[p_idx].set(new), attn_cache, na)
+    x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = cm.unembed(params["embed"], x)
+    new_cache = {
+        "mamba": jax.tree.map(lambda *ts: jnp.stack(ts), *new_mamba),
+        "attn": attn_cache,
+        "x0": x0,
+    }
+    return logits, new_cache

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts with gather-based dispatch and expert parallelism.
+
+Dispatch is index-based (no [T, E, C] one-hot) and *batch-blocked*: each
+batch row (sequence) dispatches its own tokens to per-expert capacity slots,
+so with batch sharded over the DP axes and experts over 'model', the dispatch
+gather stays local to the data shard and the combine gather is the only
+cross-'model' movement (the all-to-all-equivalent of real EP).  Tokens beyond
+capacity are dropped (GShard-style).
+
+Decode (S == 1) instead dispatches globally across the (tiny) token batch so
+per-expert capacity stays ~top_k·B/E instead of one slot per (row, expert)
+— avoiding E/top_k x FLOP waste at decode (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+
+
+def init_moe(key, cfg: ArchConfig):
+    dt = cfg.jnp_dtype
+    E = cfg.n_experts
+    F = cfg.d_ff_expert or cfg.d_ff
+    D = cfg.d_model
+    ks = jax.random.split(key, 5)
+    s = 1.0 / jnp.sqrt(D)
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (D, E)) * s).astype(jnp.float32)},
+        "w_gate": (jax.random.normal(ks[1], (E, D, F)) * s).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, D, F)) * s).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, F, D)) * (1.0 / jnp.sqrt(F))).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        from repro.models.ffn import init_ffn
+
+        p["shared"] = init_ffn(ks[4], cfg, d_ff=F * cfg.n_shared_experts)
+    return p
+
+
+def _dispatch_indices(expert_ids: jax.Array, E: int, capacity: int):
+    """expert_ids: [T, k] -> (dispatch [E, C] token-row indices, sentinel=T;
+    slot [T, k]: position inside the expert, -1 if dropped)."""
+    T, k = expert_ids.shape
+    flat = expert_ids.reshape(-1)                                   # [T*k]
+    onehot = jax.nn.one_hot(flat, E, dtype=jnp.int32)               # [T*k, E]
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.sum(ranks * onehot, axis=1)                          # [T*k]
+    ok = slot < capacity
+    token_row = jnp.arange(T * k, dtype=jnp.int32) // k
+    dispatch = jnp.full((E, capacity), T, jnp.int32)
+    dispatch = dispatch.at[flat, slot].set(
+        jnp.where(ok, token_row, T), mode="drop")
+    return dispatch, jnp.where(ok, slot, -1).reshape(T, k)
+
+
+def _expert_weights(params, cfg: ArchConfig, dtype):
+    q = cfg.quant
+    if q.mode == "fake_quant":
+        from repro.core import binarize as bz
+
+        binz = jax.vmap(lambda w: bz.fake_quant(
+            w.astype(jnp.float32), q.M, algorithm=q.algorithm,
+            K_iters=q.K_iters, group_size=q.group_size))
+        return (binz(params["w_gate"]).astype(dtype),
+                binz(params["w_up"]).astype(dtype),
+                binz(params["w_down"]).astype(dtype))
+    return params["w_gate"], params["w_up"], params["w_down"]
+
+
+def moe_ffn(params, x: jax.Array, cfg: ArchConfig):
+    """x: [B, S, D] -> (y, aux metrics)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    # group layout: per-row dispatch for sequences, global for decode
+    if S == 1:
+        G, Sg = 1, B
+    else:
+        G, Sg = B, S
+    xg = x.reshape(G, Sg, D)
+    # --- routing (fp32) ---
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)                 # [G, Sg, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    # --- dispatch (per group) ---
+    capacity = max(1, int(cfg.capacity_factor * Sg * k / E))
+    dispatch, slot = jax.vmap(
+        lambda ids: _dispatch_indices(ids, E, capacity))(expert_ids)
+    x_pad = jnp.concatenate([xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)
+    expert_in = jax.vmap(lambda xp, di: xp[di])(x_pad, dispatch)    # [G,E,C,D]
+    expert_in = cm.shard(expert_in, "batch", "experts", None, None)
+    # --- expert computation (grouped GEMMs, EP over 'model') ---
+    w_gate, w_up, w_down = _expert_weights(params, cfg, x.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, w_gate)) \
+        * jnp.einsum("gecd,edf->gecf", expert_in, w_up)
+    h = cm.shard(h, "batch", "experts", None, None)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, w_down)            # [G,E,C,D]
+    # --- combine (the all-to-all-equivalent gather) ---
+    ok = slot >= 0
+    gathered = jax.vmap(
+        lambda eo, ids, sl: eo[ids, jnp.clip(sl, 0, capacity - 1)]
+    )(expert_out, expert_ids, slot)                                 # [G,Sg,k,D]
+    y = jnp.sum(
+        jnp.where(ok[..., None], gathered, 0.0)
+        * gate_vals[..., None].astype(gathered.dtype), axis=2)
+    if cfg.n_shared_experts:
+        from repro.models.ffn import ffn_forward
+
+        y = y + ffn_forward(params["shared"], xg, cfg).astype(y.dtype)
+    # --- aux: load-balance loss (Switch-style) ---
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_ids[..., 0], E), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = {"load_balance_loss": E * jnp.sum(frac_tokens * frac_probs),
+           "dropped_frac": 1.0 - jnp.mean(ok.astype(jnp.float32))}
+    return y.reshape(B, S, D).astype(x.dtype), aux

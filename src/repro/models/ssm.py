@@ -1,0 +1,213 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm (quadratic within a chunk,
+linear across chunks); decode is the O(1) recurrent state update.  The large
+projections (in_proj/out_proj — the FLOP carriers) route through the
+quantizable linear, so the paper's binary approximation applies; the SSM
+dynamics parameters (A_log, D, dt_bias, conv) stay fp (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    conv_ch = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, H, conv_ch
+
+
+def init_mamba2(key, cfg: ArchConfig):
+    d_inner, H, conv_ch = _dims(cfg)
+    dt = cfg.jnp_dtype
+    n = cfg.ssm_state
+    g = cfg.ssm_ngroups
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * g * n + H  # z, x, B, C, dt
+    p = {
+        "in_proj": cm.init_linear(ks[0], cfg.d_model, proj_out, dt),
+        "out_proj": cm.init_linear(ks[1], d_inner, cfg.d_model, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv_width, conv_ch)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": cm.init_rmsnorm(d_inner, dt),
+    }
+    return p
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    d_inner, H, _ = _dims(cfg)
+    n, g = cfg.ssm_state, cfg.ssm_ngroups
+    idx = [d_inner, 2 * d_inner, 2 * d_inner + g * n, 2 * d_inner + 2 * g * n]
+    z = proj[..., : idx[0]]
+    xh = proj[..., idx[0]: idx[1]]
+    Bm = proj[..., idx[1]: idx[2]]
+    Cm = proj[..., idx[2]: idx[3]]
+    dt_raw = proj[..., idx[3]:]
+    return z, xh, Bm, Cm, dt_raw
+
+
+def _causal_dconv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x: [B, L, ch], w: [width, ch] -> [B, L, ch]."""
+    width = w.shape[0]
+    xf = x.astype(jnp.float32)
+    pad = jnp.pad(xf, ((0, 0), (width - 1, 0), (0, 0)))
+    y = jnp.zeros_like(xf)
+    for i in range(width):
+        y = y + pad[:, i: i + x.shape[1], :] * w[i]
+    return jax.nn.silu(y + b).astype(x.dtype)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: [..., q] -> [..., q, q]; [i, j] = sum_{j<k<=i} x_k, -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, D, chunk: int):
+    """Chunked SSD scan (Mamba2 Listing 1, jnp).
+
+    xh: [b, l, h, p]  dt: [b, l, h]  A: [h] (negative)
+    Bm, Cm: [b, l, g, n] (g groups broadcast over heads)  D: [h]
+    returns y: [b, l, h, p]
+
+    Heads are factored as h = g x e and B/C keep their group dim throughout —
+    materializing the head-broadcast ([..., h, n] via jnp.repeat) cost
+    zamba2 ~3x its whole-model HBM traffic (EXPERIMENTS.md §Perf, zamba2
+    iteration).  Einsums accumulate in fp32.
+    """
+    b, l, h, p = xh.shape
+    g = Bm.shape[2]
+    e = h // g
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+    xf = xh.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)                            # [b, l, g, n]
+    Cf = Cm.astype(jnp.float32)
+    dA = dtf * A[None, None, :]                            # [b, l, h]
+    x_dt = xf * dtf[..., None]                             # dt-premultiplied
+
+    def ch(t):  # [b, l, ...] -> [b, c, q, ...]
+        return t.reshape(b, c, chunk, *t.shape[2:])
+
+    xc = ch(x_dt).reshape(b, c, chunk, g, e, p)            # [b,c,q,g,e,p]
+    dAc = ch(dA).reshape(b, c, chunk, g, e)                # [b,c,q,g,e]
+    Bc, Cc = ch(Bf), ch(Cf)                                # [b,c,q,g,n]
+    dA_cs = jnp.cumsum(dAc, axis=2)                        # [b,c,q,g,e]
+    # --- intra-chunk (diagonal blocks) ---
+    L = jnp.exp(_segsum(jnp.moveaxis(dAc, 2, -1)))         # [b,c,g,e,q,q]
+    Y_diag = jnp.einsum("bclgn,bcsgn,bcgels,bcsgep->bclgep", Cc, Bc, L, xc)
+    # --- chunk final states ---
+    decay_states = jnp.exp(dA_cs[:, :, -1:] - dA_cs)       # [b,c,q,g,e]
+    states = jnp.einsum("bcsgn,bcsge,bcsgep->bcgepn", Bc, decay_states, xc)
+    # --- inter-chunk recurrence (scan over chunks) ---
+    chunk_decay = jnp.exp(dA_cs[:, :, -1])                 # [b,c,g,e]
+
+    def scan_fn(carry, inp):
+        st_c, dec_c = inp                                  # [b,g,e,p,n], [b,g,e]
+        new = carry * dec_c[..., None, None] + st_c
+        return new, carry                                  # state BEFORE chunk
+
+    init = jnp.zeros((b, g, e, p, states.shape[-1]), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # [b,c,g,e,p,n]
+    # --- state -> output ---
+    state_decay = jnp.exp(dA_cs)                           # [b,c,q,g,e]
+    Y_off = jnp.einsum("bclgn,bcgepn,bclge->bclgep", Cc, prev_states,
+                       state_decay)
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return y + xf * D[None, None, :, None]
+
+
+def cfg_state_n(states: jax.Array) -> int:
+    return states.shape[-1]
+
+
+def mamba2_forward(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence Mamba2 block. x: [B, L, D] -> [B, L, D]."""
+    B, L, _ = x.shape
+    d_inner, H, _ = _dims(cfg)
+    n, g = cfg.ssm_state, cfg.ssm_ngroups
+    proj = cm.linear(params["in_proj"], x, cfg.quant)
+    z, xh, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    xBC = _causal_dconv(
+        jnp.concatenate([xh, Bm, Cm], axis=-1), params["conv_w"], params["conv_b"])
+    xh = xBC[..., :d_inner].reshape(B, L, H, cfg.ssm_head_dim)
+    Bm = xBC[..., d_inner: d_inner + g * n].reshape(B, L, g, n)
+    Cm = xBC[..., d_inner + g * n:].reshape(B, L, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    chunk = min(cfg.ssm_chunk, L)
+    if L % chunk:
+        chunk = 1 if L < cfg.ssm_chunk else cfg.ssm_chunk
+    y = ssd_chunked(xh, dt, A, Bm, Cm, params["D"], chunk)   # [B, L, H, p] f32
+    y = y.reshape(B, L, d_inner)
+    y = cm.rms_norm_gated(params["norm"], y.astype(x.dtype), z, cfg.norm_eps)
+    return cm.linear(params["out_proj"], y, cfg.quant)
+
+
+# --- decode -----------------------------------------------------------------
+
+def mamba2_cache_specs(cfg: ArchConfig, batch: int):
+    d_inner, H, conv_ch = _dims(cfg)
+    return {
+        "ssm_state": jax.ShapeDtypeStruct(
+            (batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv_state": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_conv_width - 1, conv_ch), cfg.jnp_dtype),
+    }
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        mamba2_cache_specs(cfg, batch))
+
+
+def mamba2_decode(params, x: jax.Array, cfg: ArchConfig, cache):
+    """One-token recurrent update. x: [B, 1, D] -> (y [B, 1, D], cache)."""
+    B = x.shape[0]
+    d_inner, H, conv_ch = _dims(cfg)
+    n, g = cfg.ssm_state, cfg.ssm_ngroups
+    proj = cm.linear(params["in_proj"], x[:, 0], cfg.quant)     # [B, proj]
+    z, xh, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    xBC_new = jnp.concatenate([xh, Bm, Cm], axis=-1)            # [B, conv_ch]
+    window = jnp.concatenate(
+        [cache["conv_state"].astype(jnp.float32),
+         xBC_new[:, None, :].astype(jnp.float32)], axis=1)      # [B, w, ch]
+    conv = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    xBC = jax.nn.silu(conv)
+    xh = xBC[:, :d_inner].reshape(B, H, cfg.ssm_head_dim)
+    Bv = xBC[:, d_inner: d_inner + g * n].reshape(B, g, n)
+    Cv = xBC[:, d_inner + g * n:].reshape(B, g, n)
+    rep = H // g
+    Bv = jnp.repeat(Bv, rep, axis=1)                            # [B, H, n]
+    Cv = jnp.repeat(Cv, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B, H]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                               # [B, H]
+    state = cache["ssm_state"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh.astype(jnp.float32), Bv)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cv) + params["D"][None, :, None] * xh
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = cm.rms_norm_gated(params["norm"], y, z, cfg.norm_eps)
+    out = cm.linear(params["out_proj"], y, cfg.quant)[:, None, :]
+    new_cache = {
+        "ssm_state": state,
+        "conv_state": window[:, 1:].astype(cache["conv_state"].dtype),
+    }
+    return out, new_cache

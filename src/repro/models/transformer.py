@@ -1,0 +1,230 @@
+"""Decoder-only LM stack: dense / MoE / MLA variants, VLM prefix, MTP head.
+
+Layers are scanned (stacked params) for compile-time efficiency at 40-80
+layers; remat wraps the scan body.  Two homogeneous stacks are supported:
+leading dense layers (DeepSeek-V3's 3) and the main stack (dense FFN or MoE).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig, *, kind: str):
+    """kind: 'dense' | 'moe'."""
+    k1, k2 = jax.random.split(key)
+    dt = cfg.jnp_dtype
+    p = {
+        "ln1": cm.init_rmsnorm(cfg.d_model, dt),
+        "ln2": cm.init_rmsnorm(cfg.d_model, dt),
+        "attn": attn.init_mla(k1, cfg) if cfg.use_mla else attn.init_attn(k1, cfg),
+    }
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    else:
+        d_ff = cfg.d_ff if cfg.d_ff else (cfg.d_ff_expert or 128)
+        p["ffn"] = ffn_mod.init_ffn(k2, cfg, d_ff=d_ff)
+    return p
+
+
+def layer_forward(params, x, cfg: ArchConfig, *, positions=None, mask=None):
+    x = cm.shard(x, "batch", "seq", None)
+    h = cm.rms_norm(params["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        a = attn.mla_forward(params["attn"], h, cfg, positions=positions, mask=mask)
+    else:
+        a = attn.attn_forward(params["attn"], h, cfg, positions=positions, mask=mask)
+    x = x + a
+    h = cm.rms_norm(params["ln2"], x, cfg.norm_eps)
+    aux = {}
+    if "moe" in params:
+        f, aux = moe_mod.moe_ffn(params["moe"], h, cfg)
+    else:
+        f = ffn_mod.ffn_forward(params["ffn"], h, cfg)
+    return x + f, aux
+
+
+def layer_decode(params, x, cfg: ArchConfig, cache, pos):
+    h = cm.rms_norm(params["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        a, cache = attn.mla_decode(params["attn"], h, cfg, cache, pos)
+    else:
+        a, cache = attn.attn_decode(params["attn"], h, cfg, cache, pos)
+    x = x + a
+    h = cm.rms_norm(params["ln2"], x, cfg.norm_eps)
+    if "moe" in params:
+        f, _ = moe_mod.moe_ffn(params["moe"], h, cfg)
+    else:
+        f = ffn_mod.ffn_forward(params["ffn"], h, cfg)
+    return x + f, cache
+
+
+# ---------------------------------------------------------------------------
+# Full LM
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, cfg: ArchConfig, n: int, kind: str):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_layer(k, cfg, kind=kind))(keys)
+
+
+def init_lm(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 6)
+    main_kind = "moe" if cfg.n_experts else "dense"
+    n_main = cfg.n_layers - cfg.n_dense_layers
+    p = {
+        "embed": cm.init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.jnp_dtype),
+        "layers": _stacked_init(ks[1], cfg, n_main, main_kind),
+        "final_norm": cm.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+    }
+    if cfg.n_dense_layers:
+        p["dense_layers"] = _stacked_init(ks[2], cfg, cfg.n_dense_layers, "dense")
+    if not cfg.tie_embeddings:
+        p["unembed"] = cm.init_embedding(ks[3], cfg.vocab, cfg.d_model, cfg.jnp_dtype)
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": cm.init_linear(ks[4], 2 * cfg.d_model, cfg.d_model, cfg.jnp_dtype),
+            "layer": init_layer(ks[5], cfg, kind="dense"),
+            "norm": cm.init_rmsnorm(cfg.d_model, cfg.jnp_dtype),
+        }
+    return p
+
+
+def _run_stack(stacked, x, cfg: ArchConfig, positions, mask):
+    """Scan (or unrolled loop) over a homogeneous layer stack."""
+    def body(carry, layer_params):
+        y, aux = layer_forward(layer_params, carry, cfg,
+                               positions=positions, mask=mask)
+        return y, aux.get("load_balance_loss", jnp.float32(0.0))
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, lb = jax.lax.scan(body, x, stacked)
+        return x, jnp.sum(lb)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    total = jnp.float32(0.0)
+    for i in range(n):
+        layer = jax.tree.map(lambda t: t[i], stacked)
+        x, lb = body(x, layer)
+        total += lb
+    return x, total
+
+
+def lm_hidden(params, cfg: ArchConfig, tokens, *, prefix_embeds=None):
+    """Token (+ optional prefix) embeddings -> final hidden states."""
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mask = cm.causal_mask(S, cfg.sliding_window)
+    lb_total = jnp.float32(0.0)
+    if "dense_layers" in params:
+        x, lb = _run_stack(params["dense_layers"], x, cfg, positions, mask)
+        lb_total += lb
+    x, lb = _run_stack(params["layers"], x, cfg, positions, mask)
+    lb_total += lb
+    x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1]:]
+    return x, {"load_balance_loss": lb_total}
+
+
+def lm_logits(params, cfg: ArchConfig, hidden):
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = cm.unembed(table, hidden)
+    logits = cm.shard(logits, "batch", None, "vocab")
+    return cm.softcap(logits, cfg.logit_softcap)
+
+
+def lm_forward(params, cfg: ArchConfig, tokens, *, prefix_embeds=None):
+    hidden, aux = lm_hidden(params, cfg, tokens, prefix_embeds=prefix_embeds)
+    return lm_logits(params, cfg, hidden), aux
+
+
+def mtp_logits(params, cfg: ArchConfig, hidden, tokens):
+    """DeepSeek-V3 multi-token prediction: predict t+2 from (h_t, emb_{t+1}).
+
+    hidden: [B, S, D] main-stack output; tokens: [B, S].  Returns logits for
+    positions predicting tokens[t+2] (length S-1, caller aligns labels).
+    """
+    emb_next = cm.embed(params["embed"], tokens[:, 1:]).astype(hidden.dtype)
+    h = jnp.concatenate([hidden[:, :-1], emb_next], axis=-1)
+    h = cm.linear(params["mtp"]["proj"], h, cfg.quant)
+    S = h.shape[1]
+    h, _ = layer_forward(params["mtp"]["layer"], h, cfg,
+                         positions=jnp.arange(S)[None, :],
+                         mask=cm.causal_mask(S))
+    h = cm.rms_norm(params["mtp"]["norm"], h, cfg.norm_eps)
+    return lm_logits(params, cfg, h)
+
+
+# --- decode -----------------------------------------------------------------
+
+def lm_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    n_main = cfg.n_layers - cfg.n_dense_layers
+    if cfg.use_mla:
+        one = attn.mla_cache_specs(cfg, batch, max_len)
+    else:
+        one = attn.attn_cache_specs(cfg, batch, max_len)
+    stack = lambda n: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), one)
+    spec = {"layers": stack(n_main)}
+    if cfg.n_dense_layers:
+        spec["dense_layers"] = stack(cfg.n_dense_layers)
+    return spec
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, max_len: int):
+    def mk(s):
+        if s.dtype == jnp.int32:
+            return -jnp.ones(s.shape, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(mk, lm_cache_specs(cfg, batch, max_len))
+
+
+def _decode_stack(stacked, caches, x, cfg: ArchConfig, pos):
+    def body(carry, inp):
+        layer_params, cache = inp
+        y, new_cache = layer_decode(layer_params, carry, cfg, cache, pos)
+        return y, new_cache
+
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, (stacked, caches))
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    new_caches = []
+    for i in range(n):
+        layer = jax.tree.map(lambda t: t[i], stacked)
+        cache = jax.tree.map(lambda t: t[i], caches)
+        x, nc = body(x, (layer, cache))
+        new_caches.append(nc)
+    stacked_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches)
+    return x, stacked_cache
+
+
+def lm_decode_step(params, cfg: ArchConfig, tokens, pos, cache):
+    """tokens: [B, 1], pos: [B] -> (logits [B, 1, V], new cache)."""
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    new_cache = {}
+    if "dense_layers" in params:
+        x, nc = _decode_stack(params["dense_layers"], cache["dense_layers"],
+                              x, cfg, pos)
+        new_cache["dense_layers"] = nc
+    x, nc = _decode_stack(params["layers"], cache["layers"], x, cfg, pos)
+    new_cache["layers"] = nc
+    x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, cfg, x), new_cache

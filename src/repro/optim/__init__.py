@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, sgd, Optimizer, clip_by_global_norm
+from repro.optim.schedule import cosine_schedule, exponential_decay, warmup_cosine

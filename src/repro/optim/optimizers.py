@@ -1,0 +1,85 @@
+"""Functional optimizers (no external deps).
+
+AdamW — the paper's CNN-A retraining optimizer (alpha=1e-4, b1=.9, b2=.999);
+SGD+momentum — the paper's CNN-B recipe (momentum .9, exp-decayed lr from
+5e-4; Adam was "susceptible to exploding gradients" there, §V-B1).
+
+Optimizer state is kept in fp32 regardless of param dtype (mixed-precision
+training); state is sharded like the params (sharding/rules.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+
+
+def _f32(tree):
+    return jax.tree.map(lambda p: p.astype(jnp.float32), tree)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw(lr: float | Callable, *, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": zeros, "nu": jax.tree.map(jnp.copy, zeros)}
+
+    def update(grads, state, params, step):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        g32 = _f32(grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], g32)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def upd(p, m, v):
+            step_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float | Callable, *, momentum: float = 0.9,
+        grad_clip: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return {"vel": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        g32 = _f32(grads)
+        vel = jax.tree.map(lambda v, g: momentum * v + g, state["vel"], g32)
+        lr_t = lr_fn(step)
+        new_params = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - lr_t * v).astype(p.dtype),
+            params, vel)
+        return new_params, {"vel": vel}
+
+    return Optimizer(init=init, update=update)

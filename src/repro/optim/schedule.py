@@ -1,0 +1,29 @@
+"""LR schedules (jit-compatible: step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def exponential_decay(init_lr: float, decay_rate: float, decay_steps: int):
+    """Paper §V-B1: lr initialized at 5e-4, decayed exponentially."""
+    def fn(step):
+        return init_lr * decay_rate ** (step.astype(jnp.float32) / decay_steps)
+    return fn
+
+
+def cosine_schedule(init_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32) / total_steps, 1.0)
+        return init_lr * (final_frac + (1 - final_frac) * 0.5 *
+                          (1 + jnp.cos(jnp.pi * t)))
+    return fn
+
+
+def warmup_cosine(init_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_schedule(init_lr, max(total_steps - warmup_steps, 1), final_frac)
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = init_lr * s / jnp.maximum(warmup_steps, 1)
+        return jnp.where(s < warmup_steps, warm, cos(step - warmup_steps))
+    return fn

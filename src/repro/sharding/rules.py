@@ -1,0 +1,247 @@
+"""Sharding rules: parameter + activation partitioning for every arch family.
+
+Mesh axes:
+  * single-pod:  ("data", "model")          = 16 x 16  (256 chips)
+  * multi-pod:   ("pod", "data", "model")   = 2 x 16 x 16 (512 chips)
+
+Strategy (DESIGN.md §4):
+  * TP   — attention heads / FFN hidden / experts / vocab on "model".
+  * FSDP — every parameter's largest non-TP dim additionally sharded over
+           the DP domain ("pod"+"data") — ZeRO-3; optimizer state likewise.
+  * DP   — batch over ("pod", "data"); SP — sequence over "data" for the
+           batch=1 long-context cells.
+
+Rules are *pattern -> PartitionSpec* over parameter tree paths; first match
+wins; unmatched leaves are replicated (biases, norms, scalars).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _fsdp(*axes):
+    """Helper marker: replaced by the DP domain at resolution time."""
+    return axes
+
+
+# Each entry: (regex over 'path', [candidate specs — first that divides the
+# leaf's dims wins]).  Weight matrices are [in, out].
+def _param_rules(cfg: ArchConfig, mesh: Mesh, fsdp: bool = True):
+    dp = dp_axes(mesh) if fsdp else None
+    rules: list[tuple[str, list[P]]] = [
+        # embeddings / unembeddings: vocab on model, d_model FSDP
+        (r"(embed|unembed)/table", [P("model", dp), P(dp, "model"), P(dp, None)]),
+        # MoE experts: expert dim on model (EP); fallback = TP over hidden
+        # (grok: 8 experts < 16-way model axis -> TP inside experts)
+        (r"moe/w_(gate|up)$", [P("model", dp, None), P(None, dp, "model")]),
+        (r"moe/w_down$", [P("model", None, dp), P(None, "model", dp)]),
+        (r"moe/router/w", [P()]),
+        # attention projections: fused head dim on model, d_model FSDP
+        (r"attn/w(q|k|v)/w", [P(dp, "model"), P(dp, None)]),
+        (r"attn/wo/w", [P("model", dp), P(None, dp)]),
+        (r"attn/w(q|k|v)/b", [P("model"), P()]),
+        # MLA factors
+        (r"attn/wdq/w", [P(dp, "model")]),
+        (r"attn/wuq/w", [P(dp, "model")]),
+        (r"attn/wdkv/w", [P(dp, None)]),
+        (r"attn/wu(k|v)/w", [P(dp, "model")]),
+        # FFN: hidden on model, d_model FSDP
+        (r"(ffn|shared)/w_(gate|up)/w", [P(dp, "model")]),
+        (r"(ffn|shared)/w_down/w", [P("model", dp)]),
+        # Mamba2 projections: d_inner on model
+        (r"block/in_proj/w", [P(dp, "model")]),
+        (r"block/out_proj/w", [P("model", dp)]),
+        (r"block/conv_w", [P(None, "model"), P()]),
+        (r"block/conv_b", [P("model"), P()]),
+        # hybrid shared block input projection
+        (r"shared/in_proj/w", [P(dp, "model")]),
+        # MTP projection
+        (r"mtp/proj/w", [P(dp, "model")]),
+        # packed-binary deployment weights: [M, K/8, N] (+ leading stack dim)
+        # out-dim on model (TP), packed-K FSDP; alphas [M, G, N] follow N
+        (r"/B_packed$", [P(None, dp, "model"), P(None, None, "model"),
+                         P(None, dp, None), P()]),
+        (r"/alpha$", [P(None, None, "model"), P()]),
+    ]
+    return rules
+
+
+def _spec_divides(spec: P, shape, mesh: Mesh) -> bool:
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for dim, axes in zip(shape, entries):
+        if axes is None:
+            continue
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        n = int(np.prod([mesh.shape[a] for a in names]))
+        if dim % n != 0:
+            return False
+    return True
+
+
+def _fit_spec(spec: P, ndim: int) -> P:
+    specs = list(spec)
+    while len(specs) < ndim:          # stacked-layer leading axes -> None
+        specs.insert(0, None)
+    if len(specs) > ndim:
+        specs = specs[len(specs) - ndim:]
+    return P(*specs)
+
+
+def _leaf_path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_pspecs(cfg: ArchConfig, params_tree, mesh: Mesh, *,
+                 fsdp: bool = True):
+    """PartitionSpec pytree for a parameter tree (stacked layer dims get a
+    leading None automatically — detected by rank vs rule arity)."""
+    rules = _param_rules(cfg, mesh, fsdp)
+
+    def spec_for(path, leaf):
+        pstr = _leaf_path_str(path)
+        ndim = getattr(leaf, "ndim", len(leaf.shape))
+        for pat, candidates in rules:
+            if re.search(pat, pstr):
+                for cand in candidates:
+                    fitted = _fit_spec(cand, ndim)
+                    if _spec_divides(fitted, leaf.shape, mesh):
+                        return fitted
+                return P()  # nothing divides -> replicate
+        return P()  # replicate (biases, norms, scalars)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)
+
+
+def param_shardings(cfg: ArchConfig, params_tree, mesh: Mesh, *,
+                    fsdp: bool = True):
+    specs = param_pspecs(cfg, params_tree, mesh, fsdp=fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ArchConfig, batch_tree, mesh: Mesh, *,
+                 seq_sharded: bool = False):
+    """tokens/labels: batch over DP axes (seq over 'data' when batch==1 SP);
+    cache: batch over DP, heads over model."""
+    dp = dp_axes(mesh)
+
+    # actual batch size, to disambiguate the stacked-layer dim in caches
+    tokens = batch_tree.get("tokens") if isinstance(batch_tree, dict) else None
+    global_batch = tokens.shape[0] if tokens is not None else None
+
+    def spec_for(path, leaf):
+        pstr = _leaf_path_str(path)
+        shape = leaf.shape
+        ndim = len(shape)
+        dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+        if "cache" in pstr:
+            return _cache_spec(cfg, pstr, shape, mesh, global_batch)
+        if pstr.endswith("pos"):
+            return P(dp) if shape and shape[0] % dp_size == 0 else P()
+        if "tokens" in pstr or "labels" in pstr:
+            if shape[0] % dp_size == 0:
+                return P(dp, *([None] * (ndim - 1)))
+            if seq_sharded and ndim >= 2:
+                return P(None, "data", *([None] * (ndim - 2)))
+            return P()
+        if "embeds" in pstr:  # patch/frame stubs: [B, S, D]
+            if shape[0] % dp_size == 0:
+                return P(dp, None, None)
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_tree)
+
+
+def _cache_spec(cfg: ArchConfig, pstr: str, shape, mesh: Mesh,
+                global_batch: int | None = None):
+    """KV / SSM cache sharding: leading stacked-layer dim unsharded; batch on
+    DP when divisible; kv-head dim on model when divisible."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    model_size = mesh.shape["model"]
+    spec: list = [None] * len(shape)
+    # the batch dim: matched by size when known (disambiguates the stacked
+    # layer dim), else the first plausible leading dim
+    for i, d in enumerate(shape[:2]):
+        if global_batch is not None and d != global_batch:
+            continue
+        if d % dp_size == 0 and d >= dp_size:
+            spec[i] = dp
+            break
+    # head dim: size == n_kv_heads or n_heads and divisible by model axis
+    # (index 0 excluded — it's the stacked-layer dim, which can collide by
+    # value, e.g. codeqwen's 32 layers == 32 kv heads)
+    for i, d in enumerate(shape):
+        if i == 0:
+            continue
+        if spec[i] is None and d in (cfg.n_kv_heads, cfg.n_heads) and d and \
+                d % model_size == 0:
+            spec[i] = "model"
+            break
+    else:
+        # SSM state: shard the (large) d_inner-derived head dim on model
+        matched = False
+        if cfg.ssm_state and len(shape) >= 3:
+            d_inner = cfg.ssm_expand * cfg.d_model
+            H = d_inner // cfg.ssm_head_dim
+            for i, d in enumerate(shape):
+                if i == 0:
+                    continue
+                if spec[i] is None and d == H and d % model_size == 0:
+                    spec[i] = "model"
+                    matched = True
+                    break
+        if not matched and len(shape) >= 3 and cfg.kv_seq_shard:
+            # sequence-sharded KV cache: shard the largest (seq) dim over
+            # 'model' — scores partition over keys; only the softmax
+            # normalizer + weighted-V partials cross shards (tiny
+            # all-reduces) instead of per-layer logits partial sums.
+            cands = [(d, i) for i, d in enumerate(shape)
+                     if spec[i] is None and d >= 1024 and d % model_size == 0]
+            if cands:
+                matched = True
+                spec[max(cands)[1]] = "model"
+        if not matched and len(shape) >= 3:
+            # kv-head count not divisible by the model axis (MQA/GQA<16) or
+            # latent cache (MLA): shard the trailing feature dim on 'model'
+            # instead — storage-sharded KV; attention contracts it with a
+            # partial-sum all-reduce.
+            d = shape[-1]
+            if d % model_size == 0 and d >= model_size:
+                spec[-1] = "model"
+    # huge sequence dim (long-context cache, batch==1): shard over 'data'
+    used = {a for s in spec if s for a in ((s,) if isinstance(s, str) else s)}
+    if "data" not in used:
+        for i, d in enumerate(shape):
+            if spec[i] is None and d >= 8192 and d % mesh.shape["data"] == 0:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def activation_rules(mesh: Mesh, *, seq_sharded: bool = False):
+    """Logical-axis rules installed via models.common.set_axis_rules."""
+    dp = dp_axes(mesh)
+    return {
+        "batch": dp,
+        "seq": "data" if seq_sharded else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "experts": "model",
+        "vocab": "model",
+    }

@@ -1,0 +1,15 @@
+"""Shared pytest config.
+
+jax.clear_caches() between test modules: the XLA CPU JIT accumulates one
+dylib per compiled executable and a multi-hundred-compile session can hit
+"Failed to materialize symbols" — clearing the compile cache per module
+keeps the long full-suite run healthy (observed on jax 0.8.2 cpu).
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

@@ -1,0 +1,112 @@
+"""Deployment-path tests: model-wide binarization (the paper's technique as
+a serving feature) + runtime m_active switch + dry-run lowering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.core.binlinear import QuantConfig
+from repro.models import api
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(arch="qwen3_14b", **kw):
+    cfg = cb.reduced(cb.get_config(arch)).replace(dtype="float32", **kw)
+    return cfg
+
+
+class TestModelBinarization:
+    def test_binary_forward_approximates_dense(self):
+        cfg = _cfg()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8),
+                                              0, cfg.vocab)}
+        dense_logits, _ = api.forward(cfg, params, batch)
+        errs = []
+        for M in (1, 2, 4):
+            qc = QuantConfig(mode="binary", M=M, K_iters=10)
+            bp = api.binarize_model_params(cfg, params, qc=qc)
+            bcfg = cfg.replace(quant=qc)
+            blogits, _ = api.forward(bcfg, bp, batch)
+            assert blogits.shape == dense_logits.shape
+            errs.append(float(jnp.mean(
+                (blogits - dense_logits).astype(jnp.float32) ** 2)))
+        # Table II trend: error decreases monotonically with M
+        assert errs[0] > errs[1] > errs[2], errs
+        assert np.isfinite(errs[-1])
+
+    def test_m_active_runtime_switch_on_model(self):
+        """Paper §IV-D: same packed buffers, fewer levels -> larger error."""
+        cfg = _cfg()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8),
+                                              0, cfg.vocab)}
+        dense_logits, _ = api.forward(cfg, params, batch)
+        qc4 = QuantConfig(mode="binary", M=4, K_iters=10)
+        bp = api.binarize_model_params(cfg, params, qc=qc4)
+        errs = {}
+        for m_active in (1, 2, 4):
+            bcfg = cfg.replace(quant=qc4.replace(m_active=m_active))
+            lg, _ = api.forward(bcfg, bp, batch)
+            errs[m_active] = float(jnp.mean(
+                (lg - dense_logits).astype(jnp.float32) ** 2))
+        assert errs[1] > errs[2] > errs[4], errs
+
+    def test_excluded_leaves_stay_fp(self):
+        cfg = _cfg("deepseek_v3_671b")
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        bp = api.binarize_model_params(
+            cfg, params, qc=QuantConfig(mode="binary", M=2, K_iters=2))
+        assert "table" in bp["embed"]                      # embeddings fp
+        assert "w" in bp["layers"]["moe"]["router"]        # router fp
+        assert "w" in bp["layers"]["attn"]["wuk"]          # MLA factor fp
+        assert "B_packed" in bp["layers"]["attn"]["wdkv"]  # projections packed
+
+    def test_packed_bytes_are_sixteenth_of_bf16_at_M2(self):
+        cfg = _cfg()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        bp = api.binarize_model_params(
+            cfg, params, qc=QuantConfig(mode="binary", M=2, K_iters=2))
+
+        def linear_bytes(tree, key):
+            tot = 0
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+                pstr = "/".join(str(getattr(p, "key", p)) for p in path)
+                if key in pstr and "attn" in pstr:
+                    tot += leaf.size * leaf.dtype.itemsize
+            return tot
+
+        dense_b = sum(
+            l.size * 2  # as-if bf16
+            for p, l in jax.tree_util.tree_flatten_with_path(params)[0]
+            if "attn" in "/".join(str(getattr(x, "key", x)) for x in p)
+            and "/w" in "/".join(str(getattr(x, "key", x)) for x in p))
+        packed_b = linear_bytes(bp, "B_packed")
+        assert dense_b / packed_b > 7, (dense_b, packed_b)  # ~8x at M=2
+
+    def test_binary_decode_step(self):
+        cfg = _cfg()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        qc = QuantConfig(mode="binary", M=2, K_iters=4)
+        bp = api.binarize_model_params(cfg, params, qc=qc)
+        bcfg = cfg.replace(quant=qc)
+        cache = api.init_cache(bcfg, 2, 16)
+        batch = {"tokens": jnp.zeros((2, 1), jnp.int32),
+                 "pos": jnp.zeros((2,), jnp.int32), "cache": cache}
+        logits, _ = api.decode_step(bcfg, bp, batch)
+        assert logits.shape == (2, 1, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    def test_eval_shape_lowering_compatible(self):
+        """The packed tree must be buildable abstractly (dry-run path)."""
+        cfg = _cfg()
+        qc = QuantConfig(mode="binary", M=2, K_iters=2)
+        shapes = jax.eval_shape(
+            lambda k: api.binarize_model_params(
+                cfg, api.init_params(cfg, k), qc=qc),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        leaves = jax.tree.leaves(shapes)
+        assert all(hasattr(l, "shape") for l in leaves)
+        assert any(l.dtype == jnp.uint8 for l in leaves)  # packed buffers

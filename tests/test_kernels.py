@@ -1,0 +1,149 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle.
+
+Mirrors the paper's §V-A2 verification: VHDL (here: Pallas kernel) against a
+bit-accurate Python model (here: kernels/ref.py), over shape/dtype sweeps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize as bz
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _make_case(key, T, K, N, M, group_size=None):
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (T, K), jnp.float32)
+    W = jax.random.normal(kw, (K, N), jnp.float32)
+    approx = bz.algorithm2(W, M=M, K_iters=10, group_size=group_size)
+    packed = bz.pack(approx)
+    return x, W, packed
+
+
+SHAPES = [
+    # T, K, N, M      — deliberately non-multiples of the 128 blocks
+    (4, 8, 8, 1),
+    (16, 32, 24, 2),
+    (128, 128, 128, 2),
+    (64, 200, 96, 3),     # K not multiple of 8 -> padding path
+    (1, 512, 256, 4),     # decode-like GEMV row
+    (256, 64, 16, 2),
+]
+
+
+class TestBinaryMatmulKernel:
+    @pytest.mark.parametrize("T,K,N,M", SHAPES)
+    def test_matches_ref(self, T, K, N, M):
+        x, W, packed = _make_case(jax.random.PRNGKey(T * K + N + M), T, K, N, M)
+        got = kops.binary_matmul(
+            x, packed.B_packed, packed.alpha, K=K,
+            group_size=packed.group_size, interpret=True,
+        )
+        want = kref.binary_matmul_ref(
+            x, packed.B_packed, packed.alpha, K=K, group_size=packed.group_size
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x, W, packed = _make_case(jax.random.PRNGKey(0), 32, 64, 48, 2)
+        x = x.astype(dtype)
+        got = kops.binary_matmul(
+            x, packed.B_packed, packed.alpha, K=64,
+            group_size=packed.group_size, interpret=True,
+        )
+        want = kref.binary_matmul_ref(
+            x, packed.B_packed, packed.alpha, K=64, group_size=packed.group_size
+        )
+        tol = 1e-4 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+        )
+
+    def test_groupwise_alpha(self):
+        """Group-aligned K tiling: group_size 64, bk forced to divide it."""
+        T, K, N, M = 16, 256, 32, 2
+        x, W, packed = _make_case(jax.random.PRNGKey(5), T, K, N, M, group_size=64)
+        got = kops.binary_matmul(
+            x, packed.B_packed, packed.alpha, K=K, group_size=64, interpret=True,
+        )
+        want = kref.binary_matmul_ref(
+            x, packed.B_packed, packed.alpha, K=K, group_size=64
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("m_active", [1, 2, 3])
+    def test_m_active_runtime_switch(self, m_active):
+        """Paper §IV-D: throughput mode uses fewer levels on same buffers."""
+        x, W, packed = _make_case(jax.random.PRNGKey(9), 8, 64, 16, 3)
+        got = kops.binary_matmul(
+            x, packed.B_packed, packed.alpha, K=64,
+            group_size=packed.group_size, m_active=m_active, interpret=True,
+        )
+        want = kref.binary_matmul_ref(
+            x, packed.B_packed, packed.alpha, K=64,
+            group_size=packed.group_size, m_active=m_active,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_accuracy_improves_with_m_active(self):
+        """More levels -> closer to the dense matmul (paper Table II trend)."""
+        x, W, packed = _make_case(jax.random.PRNGKey(11), 32, 128, 32, 4)
+        dense = np.asarray(x @ W)
+        errs = []
+        for m in (1, 2, 3, 4):
+            y = np.asarray(kref.binary_matmul_ref(
+                x, packed.B_packed, packed.alpha, K=128,
+                group_size=packed.group_size, m_active=m))
+            errs.append(float(np.mean((y - dense) ** 2)))
+        assert all(errs[i + 1] <= errs[i] + 1e-6 for i in range(3)), errs
+
+    def test_ref_equals_dense_reconstruction(self):
+        """Oracle self-consistency: Eq. 8 factored form == x @ W_hat."""
+        x, W, packed = _make_case(jax.random.PRNGKey(13), 16, 64, 8, 3)
+        approx = bz.unpack(packed)
+        via_ref = kref.binary_matmul_ref(
+            x, packed.B_packed, packed.alpha, K=64, group_size=packed.group_size
+        )
+        via_dense = kref.binary_matmul_dense_equiv(x, approx)
+        np.testing.assert_allclose(np.asarray(via_ref), np.asarray(via_dense),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestFusedEpilogue:
+    def test_relu_pool_commutativity(self):
+        """AMU claim (paper Eq. 13): max-pool then ReLU == ReLU then max-pool."""
+        x, W, packed = _make_case(jax.random.PRNGKey(17), 32, 64, 16, 2)
+        y = kref.binary_matmul_ref(x, packed.B_packed, packed.alpha, K=64,
+                                   group_size=packed.group_size)
+        fused = kref.fused_binary_matmul_relu_pool_ref(
+            x, packed.B_packed, packed.alpha, K=64,
+            group_size=packed.group_size, pool=4)
+        manual = np.maximum(np.asarray(y), 0).reshape(8, 4, 16).max(axis=1)
+        np.testing.assert_allclose(np.asarray(fused), manual, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    T=st.integers(1, 40),
+    K=st.sampled_from([8, 16, 40, 72]),
+    N=st.integers(1, 40),
+    M=st.integers(1, 3),
+    seed=st.integers(0, 1000),
+)
+def test_property_kernel_matches_ref(T, K, N, M, seed):
+    x, W, packed = _make_case(jax.random.PRNGKey(seed), T, K, N, M)
+    got = kops.binary_matmul(x, packed.B_packed, packed.alpha, K=K,
+                             group_size=packed.group_size, interpret=True)
+    want = kref.binary_matmul_ref(x, packed.B_packed, packed.alpha, K=K,
+                                  group_size=packed.group_size)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)

@@ -1,0 +1,193 @@
+"""Integration tests: fault-tolerant trainer, resume, elastic restore, serve."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.data.tokens import SyntheticTokens
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import Request, Server
+from repro.models import api
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tiny_cfg():
+    return cb.reduced(cb.get_config("gemma_2b")).replace(
+        n_layers=2, d_model=32, d_ff=64, vocab=64, head_dim=8, dtype="float32")
+
+
+def _setup(tmp_path, total_steps=12, ckpt_every=5):
+    cfg = _tiny_cfg()
+    mesh = make_host_mesh()
+    opt = adamw(1e-2)
+    state = steps_mod.init_train_state(cfg, mesh, opt)
+    step_fn, _ = steps_mod.build_train_step(cfg, mesh, opt, donate=False)
+    data = SyntheticTokens(cfg.vocab, 16, 4, seed=0)
+    tcfg = TrainerConfig(total_steps=total_steps, checkpoint_every=ckpt_every,
+                         checkpoint_dir=str(tmp_path), log_every=100)
+    return cfg, mesh, Trainer(step_fn, state, data, tcfg), opt
+
+
+class TestTrainerFaultTolerance:
+    def test_loss_decreases(self, tmp_path):
+        cfg, mesh, trainer, _ = _setup(tmp_path, total_steps=30)
+        with mesh:
+            report = trainer.run()
+        assert report.steps_run == 30
+        assert np.mean(report.losses[-5:]) < np.mean(report.losses[:5])
+
+    def test_kill_and_resume_bit_exact(self, tmp_path):
+        """Checkpoint/restart: a job killed at step 10 resumes and produces
+        the same final params as an uninterrupted run."""
+        # uninterrupted run
+        cfg, mesh, t_full, _ = _setup(tmp_path / "a", total_steps=10,
+                                      ckpt_every=5)
+        with mesh:
+            t_full.run()
+        w_full = jax.device_get(t_full.state["params"]["embed"]["table"])
+
+        # interrupted: run to 5 (checkpoint), "crash", new trainer resumes
+        cfg, mesh, t1, _ = _setup(tmp_path / "b", total_steps=5, ckpt_every=5)
+        with mesh:
+            t1.run()
+        cfg, mesh, t2, _ = _setup(tmp_path / "b", total_steps=10, ckpt_every=5)
+        assert t2.maybe_resume()
+        assert t2.report.resumed_from == 5
+        with mesh:
+            t2.run()
+        w_resumed = jax.device_get(t2.state["params"]["embed"]["table"])
+        np.testing.assert_allclose(w_full, w_resumed, rtol=1e-6)
+
+    def test_straggler_watchdog_fires(self, tmp_path):
+        cfg, mesh, trainer, _ = _setup(tmp_path, total_steps=6, ckpt_every=10)
+        orig = trainer.step_fn
+        calls = {"n": 0}
+
+        def slow_step(state, batch):
+            calls["n"] += 1
+            if calls["n"] == 4:
+                import time
+
+                time.sleep(1.0)  # induced straggler
+            return orig(state, batch)
+
+        trainer.step_fn = slow_step
+        with mesh:
+            report = trainer.run()
+        assert any(e["step"] == 3 for e in report.straggler_events), \
+            report.straggler_events
+
+    def test_nan_guard_skips_update(self, tmp_path):
+        cfg, mesh, trainer, _ = _setup(tmp_path, total_steps=3, ckpt_every=10)
+        orig = trainer.step_fn
+        calls = {"n": 0}
+
+        def nan_step(state, batch):
+            new_state, metrics = orig(state, batch)
+            calls["n"] += 1
+            if calls["n"] == 2:
+                metrics = dict(metrics, loss=jnp.float32(np.nan))
+            return new_state, metrics
+
+        trainer.step_fn = nan_step
+        with mesh:
+            report = trainer.run()
+        assert report.nan_skips == 1
+        assert report.steps_run == 3
+
+    def test_elastic_restore_different_data_layout(self, tmp_path):
+        """Checkpoint written under one device layout restores under another
+        (reshard-on-restore): emulated by restoring into a target tree with
+        different sharding request (host mesh here is 1 device; the manager
+        API path is identical at fleet scale)."""
+        from repro.checkpoint.manager import CheckpointManager
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        cfg, mesh, trainer, opt = _setup(tmp_path, total_steps=5, ckpt_every=5)
+        with mesh:
+            trainer.run()
+        mgr = CheckpointManager(str(tmp_path))
+        mesh2 = make_host_mesh()  # "new" mesh after elastic event
+        shardings = jax.tree.map(
+            lambda x: NamedSharding(mesh2, P()), trainer.state)
+        restored, _ = mgr.restore(5, trainer.state, shardings=shardings)
+        np.testing.assert_allclose(
+            jax.device_get(restored["params"]["final_norm"]["scale"]),
+            jax.device_get(trainer.state["params"]["final_norm"]["scale"]),
+            rtol=1e-6)
+
+
+class TestGradCompressionTraining:
+    def test_compressed_training_converges(self, tmp_path):
+        cfg = _tiny_cfg()
+        mesh = make_host_mesh()
+        opt = adamw(1e-2)
+        state = steps_mod.init_train_state(cfg, mesh, opt)
+        from repro.core import compress as gcomp
+
+        state["grad_comp"] = gcomp.init_state(state["params"])
+        step_fn, _ = steps_mod.build_train_step(
+            cfg, mesh, opt, grad_compress_M=2, donate=False)
+        data = SyntheticTokens(cfg.vocab, 16, 4, seed=0)
+        losses = []
+        with mesh:
+            for _ in range(25):
+                state, metrics = step_fn(state, data.next_batch())
+                losses.append(float(metrics["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+class TestMicrobatching:
+    def test_microbatch_matches_full_batch_grads(self):
+        cfg = _tiny_cfg()
+        mesh = make_host_mesh()
+        opt = adamw(1e-2)
+        state = steps_mod.init_train_state(cfg, mesh, opt)
+        data = SyntheticTokens(cfg.vocab, 16, 8, seed=0)
+        batch = data.next_batch()
+        full, _ = steps_mod.build_train_step(cfg, mesh, opt, donate=False)
+        micro, _ = steps_mod.build_train_step(cfg, mesh, opt, microbatch=4,
+                                              donate=False)
+        with mesh:
+            s1, m1 = full(state, batch)
+            s2, m2 = micro(state, batch)
+        w1 = jax.device_get(s1["params"]["embed"]["table"])
+        w2 = jax.device_get(s2["params"]["embed"]["table"])
+        np.testing.assert_allclose(w1, w2, rtol=2e-4, atol=2e-5)
+
+
+class TestServer:
+    def test_batched_serving_completes(self):
+        cfg = _tiny_cfg()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(cfg, params, max_batch=4, max_len=64)
+        reqs = [Request(prompt=np.array([1, 2, 3], np.int32),
+                        max_new_tokens=5) for _ in range(3)]
+        for r in reqs:
+            assert srv.admit(r)
+        srv.run_until_done()
+        for r in reqs:
+            assert len(r.out_tokens) == 5
+            assert all(0 <= t < cfg.vocab for t in r.out_tokens)
+
+    def test_decode_matches_forward(self):
+        """Step-wise decode with cache reproduces teacher-forced logits."""
+        cfg = _tiny_cfg()
+        params = api.init_params(cfg, jax.random.PRNGKey(1))
+        toks = np.array([[3, 7, 11, 2, 9, 4]], np.int32)
+        logits_full, _ = api.forward(cfg, params, {"tokens": jnp.asarray(toks)})
+        cache = api.init_cache(cfg, 1, 16)
+        outs = []
+        for t in range(toks.shape[1]):
+            batch = {"tokens": jnp.asarray(toks[:, t: t + 1]),
+                     "pos": jnp.asarray([t], jnp.int32), "cache": cache}
+            lg, cache = api.decode_step(cfg, params, batch)
+            outs.append(np.asarray(lg[:, 0]))
+        dec = np.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(logits_full), dec,
+                                   rtol=2e-3, atol=2e-3)

@@ -1,0 +1,128 @@
+"""Sharding-rule unit tests (fast — pattern/spec logic, no big compiles)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as cb
+from repro.models import api
+from repro.sharding import rules as shr
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mesh(multi=False):
+    # abstract mesh over fake devices is not needed — rules only read
+    # mesh.shape / axis_names; build the smallest real mesh and patch shape
+    import jax.sharding as js
+
+    class FakeMesh:
+        def __init__(self, shape_map):
+            self._s = shape_map
+
+        @property
+        def shape(self):
+            return self._s
+
+        @property
+        def axis_names(self):
+            return tuple(self._s.keys())
+
+    if multi:
+        return FakeMesh({"pod": 2, "data": 16, "model": 16})
+    return FakeMesh({"data": 16, "model": 16})
+
+
+class TestParamRules:
+    def test_dense_arch_specs(self):
+        cfg = cb.get_config("qwen3_14b")
+        shapes = jax.eval_shape(lambda k: api.init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = shr.param_pspecs(cfg, shapes, _mesh())
+        # attention q: stacked [L, D, H*hd] -> (None, dp, model)
+        assert specs["layers"]["attn"]["wq"]["w"] == P(None, ("data",), "model")
+        assert specs["layers"]["attn"]["wo"]["w"] == P(None, "model", ("data",))
+        # embeddings: vocab on model
+        assert specs["embed"]["table"] == P("model", ("data",))
+        # norms replicated
+        assert specs["final_norm"]["scale"] == P()
+
+    def test_moe_fallback_when_experts_dont_divide(self):
+        """grok: 8 experts < 16-way model axis -> TP-inside-expert fallback."""
+        cfg = cb.get_config("grok_1_314b")
+        shapes = jax.eval_shape(lambda k: api.init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = shr.param_pspecs(cfg, shapes, _mesh())
+        wg = specs["layers"]["moe"]["w_gate"]
+        assert wg == P(None, None, ("data",), "model"), wg
+
+    def test_moe_ep_when_experts_divide(self):
+        cfg = cb.get_config("deepseek_v3_671b")
+        shapes = jax.eval_shape(lambda k: api.init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = shr.param_pspecs(cfg, shapes, _mesh())
+        assert specs["layers"]["moe"]["w_gate"] == P(None, "model", ("data",), None)
+
+    def test_multipod_dp_domain(self):
+        cfg = cb.get_config("gemma_2b")
+        shapes = jax.eval_shape(lambda k: api.init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = shr.param_pspecs(cfg, shapes, _mesh(multi=True))
+        assert specs["layers"]["attn"]["wq"]["w"] == P(
+            None, ("pod", "data"), "model")
+
+    def test_packed_binary_specs(self):
+        cfg = cb.get_config("qwen3_14b")
+        from repro.core.binlinear import QuantConfig
+
+        qc = QuantConfig(mode="binary", M=2, K_iters=2)
+        shapes = jax.eval_shape(
+            lambda k: api.binarize_model_params(
+                cfg, api.init_params(cfg, k), qc=qc),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = shr.param_pspecs(cfg.replace(quant=qc), shapes, _mesh())
+        bp = specs["layers"]["attn"]["wq"]["B_packed"]
+        # [L, M, K/8, N]: packed-K FSDP, out-dim TP
+        assert bp == P(None, None, ("data",), "model"), bp
+
+
+class TestCacheSpecs:
+    def test_decode_batch_and_heads(self):
+        cfg = cb.get_config("codeqwen15_7b")  # kv=32 divides 16
+        batch = cb.input_specs(cfg, "decode_32k")
+        specs = shr.batch_pspecs(cfg, batch, _mesh())
+        k_spec = specs["cache"]["layers"]["k"]
+        # [L, B, S, kv, hd]: batch on dp, kv heads on model
+        assert k_spec == P(None, ("data",), None, "model", None), k_spec
+
+    def test_kv_seq_shard_for_mqa(self):
+        cfg = cb.get_config("gemma_2b").replace(kv_seq_shard=True)
+        batch = cb.input_specs(cfg, "decode_32k")
+        specs = shr.batch_pspecs(cfg, batch, _mesh())
+        k_spec = specs["cache"]["layers"]["k"]
+        # [L, B, S, kv=1, hd]: seq (largest) dim on model
+        assert k_spec[2] == "model", k_spec
+
+    def test_head_dim_fallback_without_seq_shard(self):
+        cfg = cb.get_config("gemma_2b")
+        batch = cb.input_specs(cfg, "decode_32k")
+        specs = shr.batch_pspecs(cfg, batch, _mesh())
+        k_spec = specs["cache"]["layers"]["k"]
+        assert k_spec[-1] == "model", k_spec
+
+
+class TestActivationRules:
+    def test_divisibility_guard(self):
+        from repro.models import common as cm
+
+        cm.set_axis_rules({"heads": "model", "batch": ("data",)},
+                          {"data": 16, "model": 16})
+        try:
+            # 8 heads % 16 != 0 -> constraint silently dropped (no error)
+            x = jnp.zeros((16, 4, 8, 32))
+            # note: outside jit/mesh this is a no-op path check only
+            spec_ok = True
+        finally:
+            cm.set_axis_rules(None)
+        assert spec_ok

@@ -1,9 +1,10 @@
-"""Kernel micro-bench: binary matmul vs dense reference.
+"""Kernel micro-bench: binary matmul vs dense reference, and the fused
+implicit-GEMM conv kernel vs the HBM-materialized im2col path.
 
 CPU wall times (interpret-mode Pallas) are NOT TPU-indicative; the derived
 columns that matter are the analytic VMEM working set, HBM bytes per tile,
 and arithmetic intensity — the quantities the BlockSpec design controls
-(see kernels/binary_matmul.py docstring).
+(see kernels/binary_matmul.py and kernels/binary_conv.py docstrings).
 """
 from __future__ import annotations
 
@@ -13,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import binarize as bz
+from repro.core import binconv
+from repro.core.binlinear import QuantConfig
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -36,6 +39,70 @@ def tile_stats(bt, bn, bk, M):
     ai_packed = flops / (x_b + w_packed)
     ai_dense = (2 * bt * bn * bk) / (x_b + w_bf16)
     return vmem, ai_packed, ai_dense
+
+
+def conv_tile_stats(H, W, C, kh, kw, D, M, *, stride=1, pool=1, bd=128):
+    """Analytic HBM bytes moved per (image, D-tile) kernel program:
+    fused implicit GEMM vs the explicit-im2col path, fp32 activations.
+
+    fused (kernels/binary_conv.py): read the input block + the bit-packed
+    per-tap weight tile, write the *pooled* output tile.  The patch tensor
+    lives only in VMEM.
+
+    im2col (core/binconv.py conv2d + relu_maxpool): additionally writes the
+    [U·V, kh·kw·C] patch tile to HBM and reads it back for the matmul, then
+    writes the unpooled conv output and re-reads it for pooling.
+    """
+    U = (H - kh) // stride + 1
+    V = (W - kw) // stride + 1
+    bd = min(bd, D)
+    x_b = H * W * C * 4
+    w_packed = M * kh * kw * ((C + 7) // 8) * bd
+    out_pooled = (U // pool) * (V // pool) * bd * 4
+    out_unpooled = U * V * bd * 4
+    patches = U * V * kh * kw * C * 4
+    fused = x_b + w_packed + out_pooled
+    im2col_path = (x_b + 2 * patches + w_packed
+                   + out_unpooled * 2 + out_pooled)
+    return fused, im2col_path, im2col_path / fused
+
+
+# the paper's conv layers (CNN-A §V-A1) + a mid-net MobileNet point-wise conv
+CONV_CASES = [
+    ("cnn_a_conv1", dict(H=48, W=48, C=3, kh=7, kw=7, D=5, M=2, pool=2)),
+    ("cnn_a_conv2", dict(H=21, W=21, C=5, kh=4, kw=4, D=150, M=2, pool=6)),
+    ("mobilenet_pw", dict(H=14, W=14, C=256, kh=1, kw=1, D=256, M=2)),
+]
+
+
+def conv_rows(quick: bool = False):
+    """Fused-conv section: wall time (interpret vs jnp oracle) + HBM bytes."""
+    rows = []
+    kh, kw, C, D, M, H, W, pool = (4, 4, 5, 32, 2, 21, 21, 2)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2 if quick else 8, H, W, C), jnp.float32)
+    w = jax.random.normal(key, (kh, kw, C, D), jnp.float32) * 0.2
+    b = jnp.zeros((D,), jnp.float32)
+    p = binconv.binarize_conv_params(
+        {"w": w, "b": b}, QuantConfig(mode="binary", M=M, K_iters=4))
+
+    t_ref = _time(jax.jit(lambda x: kref.fused_binary_conv_relu_pool_ref(
+        x, p["B_packed"], p["alpha"], kh=kh, kw=kw, pool=pool, bias=b)), x)
+    rows.append(("kernel_binary_conv_ref_im2col_jnp", t_ref,
+                 f"shape=({x.shape[0]},{H},{W},{C})->D{D} pool{pool} M{M}"))
+    t_pal = _time(lambda x: kops.binary_conv2d(
+        x, p["B_tap_packed"], p["alpha"], b, kh=kh, kw=kw, pool=pool,
+        interpret=True), x)
+    rows.append(("kernel_binary_conv_fused_pallas_interpret", t_pal,
+                 "interpret-mode (CPU correctness path, not TPU wall time)"))
+
+    for name, case in CONV_CASES:
+        fused, im2col_b, gain = conv_tile_stats(**case)
+        rows.append((
+            f"conv_hbm_bytes_per_tile_{name}", 0.0,
+            f"fused_KB={fused / 1024:.1f} im2col_KB={im2col_b / 1024:.1f} "
+            f"reduction={gain:.1f}x"))
+    return rows
 
 
 def run(quick: bool = False):
@@ -66,6 +133,7 @@ def run(quick: bool = False):
             f"kernel_tilestats_bt{bt}_bn{bn}_bk{bk}", 0.0,
             f"vmem_KB={vmem / 1024:.0f} AI_packed={ai_p:.0f} "
             f"AI_bf16={ai_d:.0f} gain={ai_p / ai_d:.1f}x"))
+    rows.extend(conv_rows(quick))
     return rows
 
 

@@ -3,9 +3,10 @@
     PYTHONPATH=src python examples/serve_lm.py
 
 Binarizes a reduced gemma model into packed deployment form and serves a
-small batch of requests with continuous batching, once in high-accuracy mode
-(all M levels) and once in high-throughput mode (m_active=1) — the paper's
-§IV-D runtime switch.
+mixed batch of requests with continuous batching: high-accuracy requests
+(all M levels) and high-throughput requests (m_active=1) side by side in the
+same server, off the same packed buffers — the paper's §IV-D runtime switch,
+selected per request via ``Request.m_active``.
 """
 import numpy as np
 import jax
@@ -27,18 +28,18 @@ def main():
                np.array([17, 3, 3, 8], np.int32),
                np.array([1, 1, 2, 3, 5], np.int32)]
 
-    for label, m_active in (("high-accuracy (m=2)", None),
-                            ("high-throughput (m=1)", 1)):
-        scfg = cfg.replace(quant=qc.replace(m_active=m_active))
-        srv = Server(scfg, bparams, max_batch=4, max_len=64)
-        reqs = [Request(prompt=p, max_new_tokens=8) for p in prompts]
-        for r in reqs:
-            assert srv.admit(r)
-        srv.run_until_done()
-        print(f"{label}:")
-        for i, r in enumerate(reqs):
-            print(f"  req{i} prompt={list(map(int, prompts[i]))} "
-                  f"-> {r.out_tokens}")
+    srv = Server(cfg.replace(quant=qc), bparams, max_batch=4, max_len=64)
+    modes = (None, 1, None)  # per-request §IV-D level count (None = all M)
+    reqs = [Request(prompt=p, max_new_tokens=8, m_active=m)
+            for p, m in zip(prompts, modes)]
+    for r in reqs:
+        assert srv.admit(r)
+    srv.run_until_done()
+    for i, r in enumerate(reqs):
+        label = ("high-throughput (m=1)" if r.m_active == 1
+                 else "high-accuracy (all levels)")
+        print(f"req{i} [{label}] prompt={list(map(int, prompts[i]))} "
+              f"-> {r.out_tokens}")
 
 
 if __name__ == "__main__":

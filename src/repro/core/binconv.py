@@ -7,6 +7,20 @@ AGU's job on the FPGA) followed by the binary dot product (the PA's job):
 
 The fused ReLU+max-pool epilogue reproduces the AMU (paper Eq. 13).  The
 dense (fp) path is the baseline the paper compares against.
+
+Two execution strategies for the binary deployment path:
+
+  * explicit im2col (``conv2d``): materializes the [B, U, V, kh*kw*C] patch
+    tensor, then runs the binary matmul — simple, but the patch tensor is a
+    kh·kw× HBM blow-up of the activation stream.
+  * fused implicit GEMM (``conv2d_relu_pool`` with ``QuantConfig.fuse_conv``
+    and ``use_pallas``): kernels/binary_conv.py extracts patches tile-by-tile
+    in VMEM, runs the per-level bit-unpack + MXU matmul, and applies the AMU
+    epilogue (bias + max-pool + ReLU) before write-back — the im2col tensor
+    never exists in HBM and the output stream is already pooled.
+
+``QuantConfig.m_active`` (paper §IV-D) selects how many of the packed levels
+both paths apply at runtime — the serving-time accuracy↔throughput switch.
 """
 from __future__ import annotations
 
@@ -17,24 +31,33 @@ from repro.core import binarize as bz
 from repro.core.binlinear import QuantConfig, DENSE
 
 
+def same_pads(size: int, k: int, stride: int) -> tuple[int, int]:
+    """XLA-convention SAME padding (lo, hi) for one spatial dim.
+
+    out = ceil(size/stride); total = (out-1)*stride + k - size, split with the
+    extra element on the *high* side — asymmetric for even kernels, matching
+    ``jax.lax.conv_general_dilated(padding="SAME")`` (e.g. CNN-A's 4x4 conv2).
+    """
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return total // 2, total - total // 2
+
+
 def im2col(x: jax.Array, kh: int, kw: int, stride: int = 1,
            padding: str = "VALID") -> jax.Array:
     """x: [B, H, W, C] -> patches [B, U, V, kh*kw*C] (row-major, like the
     paper's feature-buffer layout)."""
     B, H, W, C = x.shape
     if padding == "SAME":
-        ph, pw = kh // 2, kw // 2
-        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+        x = jnp.pad(x, ((0, 0), same_pads(H, kh, stride),
+                        same_pads(W, kw, stride), (0, 0)))
         H, W = x.shape[1], x.shape[2]
     U = (H - kh) // stride + 1
     V = (W - kw) // stride + 1
-    idx_u = jnp.arange(U) * stride
-    idx_v = jnp.arange(V) * stride
     patches = jnp.stack(
         [x[:, u0: u0 + H - kh + 1: stride, v0: v0 + W - kw + 1: stride, :]
          for u0 in range(kh) for v0 in range(kw)], axis=3,
     )  # [B, U, V, kh*kw, C]
-    del idx_u, idx_v
     return patches.reshape(B, U, V, kh * kw * C)
 
 
@@ -81,18 +104,28 @@ def conv2d(params: dict, x: jax.Array, *, stride: int = 1,
 
 
 def binarize_conv_params(params: dict, quant: QuantConfig) -> dict:
-    """Offline: fp conv filters -> packed binary form (per-filter alpha)."""
+    """Offline: fp conv filters -> packed binary form (per-filter alpha).
+
+    Emits both packings: the flat ``B_packed [M, ceil(K/8), D]`` stream
+    (im2col + matmul path) and the per-tap ``B_tap_packed
+    [M, kh*kw, ceil(C/8), D]`` layout the fused conv kernel consumes (each
+    spatial tap's C-slice byte-aligned; see kernels/binary_conv.py).
+    """
     kh, kw, C, D = params["w"].shape
     K = kh * kw * C
     W = params["w"].reshape(K, D).astype(jnp.float32)
     approx, _ = bz.approximate_tensor(
         W, quant.M, algorithm=quant.algorithm, K_iters=quant.K_iters,
         group_size=quant.group_size)
+    from repro.kernels import binary_conv as bck
+
     B = approx.B
+    tap_packed = bck.pack_taps(B, kh, kw, C)
     pad = (-K) % 8
     if pad:
         B = jnp.concatenate([B, jnp.ones((quant.M, pad, D), jnp.int8)], axis=1)
-    out = {"B_packed": bz.pack_bits(B), "alpha": approx.alpha,
+    out = {"B_packed": bz.pack_bits(B), "B_tap_packed": tap_packed,
+           "alpha": approx.alpha,
            "kh": kh, "kw": kw}  # kh/kw: static ints (example-path only)
     if "b" in params:
         out["b"] = params["b"]
@@ -105,3 +138,48 @@ def relu_maxpool(x: jax.Array, pool: int) -> jax.Array:
     assert H % pool == 0 and W % pool == 0, "downsampling only (paper §III-B)"
     y = x.reshape(B, H // pool, pool, W // pool, pool, C).max(axis=(2, 4))
     return jnp.maximum(y, 0.0)
+
+
+def conv2d_relu_pool(params: dict, x: jax.Array, *, stride: int = 1,
+                     padding: str = "VALID", pool: int = 1,
+                     quant: QuantConfig = DENSE) -> jax.Array:
+    """Conv + bias + max-pool + ReLU — the paper's full PE→PA→AMU pipeline.
+
+    With packed-binary params and ``quant.fuse_conv`` + ``quant.use_pallas``,
+    routes to the fused implicit-GEMM Pallas kernel (kernels/binary_conv.py):
+    patches are extracted in VMEM, the AMU epilogue runs before write-back,
+    and the [B·U·V, kh·kw·C] im2col tensor never exists in HBM.  Any other
+    configuration (dense / fake-quant / unfused binary / pool not dividing
+    the conv output) falls back to ``conv2d`` + ``relu_maxpool`` —
+    numerically equivalent, just unfused.
+    """
+    binary = "B_packed" in params or "B_tap_packed" in params
+    if binary and quant.fuse_conv and quant.use_pallas:
+        kh, kw = params["kh"], params["kw"]
+        B, H, W, C = x.shape
+        if padding == "SAME":
+            (pt, pb), (pl_, pr) = same_pads(H, kh, stride), same_pads(W, kw, stride)
+            Hp, Wp = H + pt + pb, W + pl_ + pr
+        else:
+            Hp, Wp = H, W
+        U = (Hp - kh) // stride + 1
+        V = (Wp - kw) // stride + 1
+        if U % pool == 0 and V % pool == 0:
+            tap = params.get("B_tap_packed")
+            if tap is None:  # packed trees from before the fused kernel landed
+                from repro.kernels import binary_conv as bck
+
+                tap = bck.repack_taps(params["B_packed"], kh, kw, C)
+            D = params["alpha"].shape[-1]
+            bias = params.get("b")
+            if bias is None:
+                bias = jnp.zeros((D,), jnp.float32)
+            from repro.kernels import ops as kops
+
+            y = kops.binary_conv2d(
+                x, tap, params["alpha"], bias, kh=kh, kw=kw, stride=stride,
+                padding=padding, pool=pool, m_active=quant.m_active,
+                interpret=quant.interpret)
+            return y.astype(x.dtype)
+    y = conv2d(params, x, stride=stride, padding=padding, quant=quant)
+    return relu_maxpool(y, pool)

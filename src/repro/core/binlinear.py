@@ -35,6 +35,9 @@ class QuantConfig:
     m_active: int | None = None     # runtime levels used (<= M); None = all
     use_pallas: bool = False        # route binary mode through Pallas kernel
     interpret: bool = False         # Pallas interpret mode (CPU validation)
+    fuse_conv: bool = False         # binary convs: fused implicit-GEMM kernel
+                                    # (patches in VMEM, AMU epilogue) instead
+                                    # of HBM im2col + matmul; needs use_pallas
 
     def replace(self, **kw: Any) -> "QuantConfig":
         return dataclasses.replace(self, **kw)

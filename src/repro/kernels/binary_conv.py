@@ -1,0 +1,188 @@
+"""Pallas TPU kernel: fused implicit-GEMM binary convolution (AGU+PA+AMU).
+
+The im2col path (core/binconv.py) materializes a ``[B·U·V, kh·kw·C]`` patch
+tensor in HBM — a kh·kw× blow-up of the activation stream — before the binary
+matmul ever runs, forfeiting the memory-stream win the paper's compression
+(Eq. 6) buys.  On the FPGA the AGU streams patches out of the feature buffer;
+here the kernel does the same job in VMEM:
+
+  1. AGU:  extract the patch tile for one image directly from the input block
+     with kh·kw static strided slices — the im2col tensor only ever exists as
+     a VMEM value, never in HBM.
+  2. PE/PA: per level m, unpack the bit-packed filters to ±1, fold the
+     per-(level, group) alpha in per K row, and run one MXU matmul
+     (the same per-level compute order as binary_matmul.py).
+  3. AMU:  bias + 2D max-pool + ReLU epilogue (paper Eq. 13, pool then ReLU
+     == ReLU then pool by commutativity) before the HBM write-back, so the
+     output stream is already pooled (pool² fewer bytes).
+
+Weight layout: the flat ``B_packed [M, ceil(K/8), D]`` byte stream crosses
+spatial-tap boundaries whenever C % 8 != 0, so the conv kernel uses a per-tap
+repacking ``B_tap_packed [M, kh·kw, ceil(C/8), D]`` (each tap's C-slice padded
+to a byte boundary; ``repack_taps`` converts, binconv.binarize_conv_params
+emits it directly).  Overhead: at most 7 bits per (level, tap, channel).
+
+Grid: (B, D/BD) — one program per (image, output-channel tile).  The spatial
+extent of one image lives in VMEM whole; D is tiled MXU-style.  alpha/bias/
+weights are broadcast along the batch grid dim, x along the D grid dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import binarize as bz
+
+
+def pack_taps(B: jax.Array, kh: int, kw: int, C: int) -> jax.Array:
+    """±1 int8 [M, kh*kw*C, D] -> per-tap packed [M, kh*kw, ceil(C/8), D].
+
+    Each spatial tap's C-slice is padded to a byte boundary with +1 bits;
+    the kernel slices them off after unpacking, so their value never matters.
+    """
+    M, K, D = B.shape
+    B = B.reshape(M, kh * kw, C, D)
+    c_pad = (-C) % 8
+    if c_pad:
+        B = jnp.concatenate(
+            [B, jnp.ones((M, kh * kw, c_pad, D), jnp.int8)], axis=2)
+    Cp = C + c_pad
+    return bz.pack_bits(B.reshape(M * kh * kw, Cp, D)).reshape(
+        M, kh * kw, Cp // 8, D)
+
+
+def repack_taps(B_packed: jax.Array, kh: int, kw: int, C: int) -> jax.Array:
+    """Flat [M, ceil(K/8), D] uint8 -> per-tap [M, kh*kw, ceil(C/8), D] uint8
+    (K = kh*kw*C row-major over (tap_i, tap_j, c)).
+
+    Weight-layout transform for packed trees that predate the fused kernel;
+    note it runs per call when hit from a traced forward — prefer converting
+    the tree once (binarize_conv_params emits B_tap_packed directly).
+    """
+    M, K8, D = B_packed.shape
+    K = kh * kw * C
+    B = bz.unpack_bits(B_packed, K8 * 8)[:, :K, :]       # [M, K, D] ±1
+    return pack_taps(B, kh, kw, C)
+
+
+def _kernel(x_ref, bp_ref, alpha_ref, bias_ref, o_ref, *,
+            kh: int, kw: int, C: int, stride: int, pool: int,
+            U: int, V: int, group_size: int, m_active: int, relu: bool):
+    """One (image, BD output channels) tile: patches + matmuls + AMU epilogue."""
+    x = x_ref[0]                                     # [Hp, Wp, C]
+    # --- AGU: implicit im2col, tap-major to match the K layout (i, j, c) ---
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            xs = x[i: i + (U - 1) * stride + 1: stride,
+                   j: j + (V - 1) * stride + 1: stride, :]
+            cols.append(xs.reshape(U * V, C))
+    patches = jnp.concatenate(cols, axis=1).astype(jnp.float32)  # [U*V, K]
+
+    K = kh * kw * C
+    G = K // group_size
+    bd = o_ref.shape[-1]
+    c8 = bp_ref.shape[2]
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (kh * kw, c8, 8, 1), 2)
+    acc = jnp.zeros((U * V, bd), jnp.float32)
+    for m in range(m_active):                        # static unroll over levels
+        packed = bp_ref[m]                           # [kh*kw, C8, bd] uint8
+        bits = (packed[:, :, None, :] >> shifts) & jnp.uint8(1)
+        w = (bits.astype(jnp.int8) * 2 - 1).reshape(kh * kw, c8 * 8, bd)
+        w = w[:, :C, :].reshape(K, bd).astype(jnp.float32)
+        a = alpha_ref[m]                             # [G, bd]
+        a_exp = jnp.broadcast_to(
+            a[:, None, :], (G, group_size, bd)).reshape(K, bd)
+        acc = acc + jax.lax.dot_general(
+            patches, w * a_exp,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    # --- AMU epilogue: bias + 2D max-pool + ReLU, then the only HBM write ---
+    y = acc + bias_ref[0][None, :]
+    y = y.reshape(U, V, bd)
+    if pool > 1:
+        y = y.reshape(U // pool, pool, V // pool, pool, bd).max(axis=(1, 3))
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[0] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "pool", "group_size",
+                     "m_active", "relu", "bd", "interpret"),
+)
+def binary_conv2d_pallas(
+    x: jax.Array,
+    B_tap_packed: jax.Array,
+    alpha: jax.Array,
+    bias: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    pool: int = 1,
+    group_size: int,
+    m_active: int | None = None,
+    relu: bool = True,
+    bd: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused binary conv + bias + 2D max-pool + ReLU.  fp32 output.
+
+    x:            [B, Hp, Wp, C]  (already padded for SAME by the caller)
+    B_tap_packed: [M, kh*kw, ceil(C/8), D] uint8  (see repack_taps)
+    alpha:        [M, G, D] float  (G = kh*kw*C // group_size)
+    bias:         [D] float
+    returns       [B, U//pool, V//pool, D] float32 where
+                  U = (Hp-kh)//stride + 1, V = (Wp-kw)//stride + 1.
+
+    U and V must be divisible by ``pool`` (downsampling-only pooling, paper
+    §III-B — binconv.relu_maxpool asserts the same).
+    """
+    B, Hp, Wp, C = x.shape
+    M, T, C8, D = B_tap_packed.shape
+    assert T == kh * kw, (T, kh, kw)
+    assert C8 * 8 >= C, (C8, C)
+    m_active = min(m_active or M, M)  # can't apply more levels than packed
+    U = (Hp - kh) // stride + 1
+    V = (Wp - kw) // stride + 1
+    assert U % pool == 0 and V % pool == 0, (U, V, pool)
+    G = alpha.shape[1]
+    assert G * group_size == kh * kw * C, (G, group_size, kh, kw, C)
+
+    bd = min(bd, max(8, D))
+    d_rem = (-D) % bd
+    if d_rem:  # zero alpha/bias in the pad: padded channels contribute zeros
+        B_tap_packed = jnp.pad(B_tap_packed, ((0, 0), (0, 0), (0, 0), (0, d_rem)))
+        alpha = jnp.pad(alpha, ((0, 0), (0, 0), (0, d_rem)))
+        bias = jnp.pad(bias, ((0, d_rem),))
+    Dp = D + d_rem
+
+    B_tap_packed = B_tap_packed[:m_active]
+    alpha = alpha[:m_active].astype(jnp.float32)
+    bias2 = bias.astype(jnp.float32).reshape(1, Dp)
+
+    grid = (B, Dp // bd)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, kh=kh, kw=kw, C=C, stride=stride, pool=pool,
+            U=U, V=V, group_size=group_size, m_active=m_active, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, C), lambda b, d: (b, 0, 0, 0)),
+            pl.BlockSpec((m_active, T, C8, bd), lambda b, d: (0, 0, 0, d)),
+            pl.BlockSpec((m_active, G, bd), lambda b, d: (0, 0, d)),
+            pl.BlockSpec((1, bd), lambda b, d: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((1, U // pool, V // pool, bd),
+                               lambda b, d: (b, 0, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((B, U // pool, V // pool, Dp),
+                                       jnp.float32),
+        interpret=interpret,
+    )(x, B_tap_packed, alpha, bias2)
+    return out[..., :D]

@@ -33,8 +33,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, bp_ref, alpha_ref, o_ref, *, m_active: int, n_k_blocks: int):
-    """One (BT, BN) output tile; invoked n_k_blocks times along the K grid."""
+def _kernel(x_ref, bp_ref, alpha_ref, o_ref, *, m_active: int, n_k_blocks: int,
+            full_groups_size: int = 0):
+    """One (BT, BN) output tile; invoked n_k_blocks times along the K grid.
+
+    ``full_groups_size > 0`` selects the single-K-block grouped-alpha mode:
+    the whole (padded) K lives in one block and alpha arrives as [M, G, BN],
+    applied per K row by folding it into the unpacked ±1 weights.  This is
+    the legal path for group sizes that are not multiples of 8 (no packed
+    K-tile boundary can align with the group boundaries then).
+    """
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -49,12 +57,27 @@ def _kernel(x_ref, bp_ref, alpha_ref, o_ref, *, m_active: int, n_k_blocks: int):
         packed = bp_ref[m]                        # [BK/8, BN] uint8
         bits = (packed[:, None, :] >> shifts) & jnp.uint8(1)
         bpm = (bits.astype(jnp.int8) * 2 - 1).reshape(-1, packed.shape[-1])
-        p = jax.lax.dot_general(
-            xb, bpm.astype(jnp.float32),
-            dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )                                         # [BT, BN]
-        acc = acc + alpha_ref[m, 0, :][None, :] * p
+        if full_groups_size:
+            a = alpha_ref[m]                      # [G, BN]
+            G, bn = a.shape
+            a_exp = jnp.broadcast_to(
+                a[:, None, :], (G, full_groups_size, bn)
+            ).reshape(G * full_groups_size, bn)
+            kp = bpm.shape[0]
+            if kp > G * full_groups_size:         # 8-padding rows (x is zero)
+                a_exp = jnp.pad(a_exp, ((0, kp - G * full_groups_size), (0, 0)))
+            acc = acc + jax.lax.dot_general(
+                xb, bpm.astype(jnp.float32) * a_exp,
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            p = jax.lax.dot_general(
+                xb, bpm.astype(jnp.float32),
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )                                     # [BT, BN]
+            acc = acc + alpha_ref[m, 0, :][None, :] * p
     o_ref[...] = o_ref[...] + acc
 
 
@@ -78,16 +101,24 @@ def binary_matmul_pallas(
     """y[T, N] = sum_m alpha_m ⊙ (x @ B_m) over bit-packed B.  fp32 output.
 
     Pads T/N/K to block multiples; K-padding is safe because padded x columns
-    are zero.  ``group_size % bk == 0`` required (group boundaries align with
-    K tiles); the ops.py wrapper picks a legal bk automatically.
+    are zero.  Grouped alpha (G > 1) wants ``group_size % bk == 0`` (group
+    boundaries align with K tiles); when group_size is not a multiple of 8
+    that is impossible and the kernel switches to a single-K-block mode that
+    folds alpha into the unpacked weights per row.  The ops.py wrapper picks
+    a legal bk automatically.
     """
     T, Kx = x.shape
     M, K8, N = B_packed.shape
     assert Kx == K, (Kx, K)
-    m_active = m_active or M
+    m_active = min(m_active or M, M)  # can't apply more levels than packed
     G = alpha.shape[1]
     assert G * group_size == K, (G, group_size, K)
-    assert group_size % bk == 0 or G == 1, (group_size, bk)
+    # Grouped alpha needs K-tile boundaries aligned to group boundaries; when
+    # that's impossible (group_size not a multiple of bk) the whole K must fit
+    # in a single block and alpha is folded in per K row inside the kernel.
+    full_groups = G > 1 and group_size % bk != 0
+    if full_groups:
+        bk = K8 * 8                      # single K block, multiple of 8
 
     K_pad = K8 * 8
     # pad x's K to K_pad (packed buffer is already padded)
@@ -117,13 +148,18 @@ def binary_matmul_pallas(
     def alpha_idx(t, n, k):
         return (0, (k * bk) // group_size if G > 1 else 0, n)
 
+    if full_groups:
+        alpha_spec = pl.BlockSpec((m_active, G, bn), lambda t, n, k: (0, 0, n))
+    else:
+        alpha_spec = pl.BlockSpec((m_active, 1, bn), alpha_idx)
     out = pl.pallas_call(
-        functools.partial(_kernel, m_active=m_active, n_k_blocks=n_k_blocks),
+        functools.partial(_kernel, m_active=m_active, n_k_blocks=n_k_blocks,
+                          full_groups_size=group_size if full_groups else 0),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bt, bk), lambda t, n, k: (t, k)),
             pl.BlockSpec((m_active, bk // 8, bn), lambda t, n, k: (0, k, n)),
-            pl.BlockSpec((m_active, 1, bn), alpha_idx),
+            alpha_spec,
         ],
         out_specs=pl.BlockSpec((bt, bn), lambda t, n, k: (t, n)),
         out_shape=jax.ShapeDtypeStruct((Tp, Np), jnp.float32),

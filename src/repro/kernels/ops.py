@@ -2,14 +2,17 @@
 
 ``binary_matmul`` flattens leading dims, picks legal block sizes for the
 actual problem shape, and routes to the Pallas kernel (TPU, or interpret=True
-for CPU validation).  The dry-run / pure-XLA path uses kernels/ref.py instead
-(see repro.core.binlinear).
+for CPU validation).  ``binary_conv2d`` does the same for the fused
+implicit-GEMM conv kernel (SAME padding resolved here, so the kernel only
+ever sees pre-padded inputs).  The dry-run / pure-XLA path uses
+kernels/ref.py instead (see repro.core.binlinear / repro.core.binconv).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import binary_conv as bck
 from repro.kernels import binary_matmul as bmk
 
 
@@ -47,12 +50,58 @@ def binary_matmul(
     # bk must divide group_size (or G == 1); cap at 256 for VMEM
     if alpha.shape[1] == 1:
         bk = bk or _pick_block(K8 * 8, 256)
+    elif group_size % 8 == 0:
+        if bk is None:
+            bk = _pick_block(group_size, 256)
+            while group_size % bk and bk > 8:
+                bk //= 2  # terminates at a legal divisor: 8 | group_size
     else:
-        bk = bk or _pick_block(group_size, 256)
-        while group_size % bk and bk > 8:
-            bk //= 2
+        # group_size % 8 != 0: no multiple-of-8 K tile can align with group
+        # boundaries, so take the kernel's single-block grouped-alpha path
+        # (whole padded K in one block, alpha folded in per row).
+        bk = bk or K8 * 8
     y = bmk.binary_matmul_pallas(
         x2, B_packed, alpha, K=K, group_size=group_size,
         m_active=m_active, bt=bt, bn=bn, bk=bk, interpret=interpret,
     )
     return y.reshape(*lead, N).astype(x.dtype) if x.dtype != jnp.float32 else y.reshape(*lead, N)
+
+
+def binary_conv2d(
+    x: jax.Array,
+    B_tap_packed: jax.Array,
+    alpha: jax.Array,
+    bias: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "VALID",
+    pool: int = 1,
+    m_active: int | None = None,
+    relu: bool = True,
+    interpret: bool = False,
+    bd: int | None = None,
+) -> jax.Array:
+    """Fused binary conv + bias + max-pool + ReLU via the Pallas kernel.
+
+    x: [B, H, W, C] -> [B, U//pool, V//pool, D] in fp32.  The im2col tensor
+    never touches HBM (patch extraction runs in VMEM inside the kernel).
+    """
+    from repro.core.binconv import same_pads
+
+    B, H, W, C = x.shape
+    if padding == "SAME":
+        x = jnp.pad(x, ((0, 0), same_pads(H, kh, stride),
+                        same_pads(W, kw, stride), (0, 0)))
+    elif padding != "VALID":
+        raise ValueError(padding)
+    K = kh * kw * C
+    group_size = K // alpha.shape[1]
+    D = alpha.shape[-1]
+    return bck.binary_conv2d_pallas(
+        x, B_tap_packed, alpha, bias,
+        kh=kh, kw=kw, stride=stride, pool=pool, group_size=group_size,
+        m_active=m_active, relu=relu, bd=bd or _pick_block(D, 128),
+        interpret=interpret,
+    )

@@ -29,7 +29,7 @@ def binary_matmul_ref(
     returns   [..., N] float32
     """
     M, K8, N = B_packed.shape
-    m = m_active or M
+    m = min(m_active or M, M)  # §IV-D: can't apply more levels than packed
     K_pad = K8 * 8
     B = bz.unpack_bits(B_packed[:m], K_pad)[:, :K, :].astype(jnp.float32)
     G = K // group_size
@@ -74,3 +74,38 @@ def fused_binary_matmul_relu_pool_ref(
     T, N = y.shape
     y = y.reshape(T // pool, pool, N)
     return jnp.maximum(jnp.max(y, axis=1), 0.0)
+
+
+def fused_binary_conv_relu_pool_ref(
+    x: jax.Array,
+    B_packed: jax.Array,
+    alpha: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "VALID",
+    pool: int = 1,
+    m_active: int | None = None,
+    bias: jax.Array | None = None,
+    relu: bool = True,
+) -> jax.Array:
+    """Conv oracle for the fused implicit-GEMM kernel: explicit im2col +
+    binary matmul (Eq. 8) + bias + 2D max-pool + ReLU (AMU, Eq. 13).
+
+    x: [B, H, W, C]; B_packed is the *flat* [M, ceil(K/8), D] layout
+    (K = kh*kw*C) — the reference deliberately exercises the HBM-materialized
+    path the Pallas kernel eliminates.  Returns [B, U//pool, V//pool, D] f32.
+    """
+    from repro.core import binconv
+
+    patches = binconv.im2col(x, kh, kw, stride, padding)
+    K = patches.shape[-1]
+    group_size = K // alpha.shape[1]
+    y = binary_matmul_ref(patches, B_packed, alpha, K=K,
+                          group_size=group_size, m_active=m_active)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    B, U, V, D = y.shape
+    y = y.reshape(B, U // pool, pool, V // pool, pool, D).max(axis=(2, 4))
+    return jnp.maximum(y, 0.0) if relu else y

@@ -4,8 +4,19 @@ accuracy<->throughput switch.
 The BinArray §IV-D feature — hardware built for M_arch levels can serve in
 high-accuracy mode (M = 2·M_arch, two passes) or high-throughput mode
 (M = M_arch, one pass) *at runtime* — maps to the ``m_active`` knob of the
-binary-linear path: the packed buffers hold M levels; each request batch
-chooses how many to apply.
+binary-linear path: the packed buffers hold M levels; each **request**
+chooses how many to apply via ``Request.m_active``.
+
+Because m_active selects how many statically-unrolled level matmuls run, it
+is a compile-time constant of the decode step: the server keeps one jitted
+decode function per distinct m_active it has seen (at most M+1 of them) and,
+each step, groups the active slots by their requested level count and runs
+one batched decode per group.  Slots outside the running group see a zero
+token; the cache rows that writes are transient — they always land at a
+position the owning slot has not yet attended past, and that slot's next
+real decode overwrites the row before attending to it (the same mechanism
+token-wise prefill relies on).  This invariant holds for positional KV
+caches only; recurrent-state families are rejected at admit time.
 
 `Server` implements continuous batching over a request queue: prefill on
 arrival (teacher-forced forward to warm the cache), then step-wise batched
@@ -14,6 +25,7 @@ decode; slots free as sequences finish.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -31,6 +43,7 @@ class Request:
     m_active: int | None = None   # paper §IV-D runtime mode (None = all levels)
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    last_logits: np.ndarray | None = None   # [V] logits of the newest token
 
 
 class Server:
@@ -48,11 +61,48 @@ class Server:
         self.cache = api.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)
         self.slots: list[Request | None] = [None] * max_batch
-        self._decode = jax.jit(
-            lambda p, b: api.decode_step(cfg, p, b))
+        # one jitted decode per distinct m_active (§IV-D: the level count is
+        # static — it sets how many unrolled level matmuls the step runs)
+        self._decode_fns: dict[int | None, Callable] = {}
+
+    def _norm_m(self, m_active: int | None) -> int | None:
+        """Canonical per-request level count: clamp to [1, M] (a request
+        asking for more levels than the buffers hold serves full-accuracy),
+        and collapse an explicit request for the server's default count onto
+        the ``None`` key — same computation, one shared jitted decode and
+        one shared batch group per step."""
+        if m_active is None:
+            return None
+        m_active = max(1, min(m_active, self.cfg.quant.M))
+        default = self.cfg.quant.m_active or self.cfg.quant.M
+        return None if m_active == default else m_active
+
+    def _decode_for(self, m_active: int | None) -> Callable:
+        m_active = self._norm_m(m_active)
+        fn = self._decode_fns.get(m_active)
+        if fn is None:
+            cfg = self.cfg
+            if m_active is not None:
+                cfg = cfg.replace(quant=cfg.quant.replace(m_active=m_active))
+            fn = jax.jit(functools.partial(api.decode_step, cfg))
+            self._decode_fns[m_active] = fn
+        return fn
 
     # ------------------------------------------------------------ admit ---
     def admit(self, req: Request) -> bool:
+        if self.cfg.family in ("ssm", "hybrid"):
+            # Recurrent-state families update ssm/conv state unconditionally
+            # for every batch row, so the transient-cache-row argument above
+            # does not apply: a grouped decode would advance non-group
+            # slots' recurrent state with pad tokens.  One level count per
+            # Server until masked state updates land (ROADMAP).
+            keys = {self._norm_m(r.m_active)
+                    for r in self.slots if r and not r.done}
+            if keys and self._norm_m(req.m_active) not in keys:
+                raise ValueError(
+                    "mixed per-request m_active is not supported for "
+                    f"family={self.cfg.family!r} (recurrent state); serve "
+                    "one level count per Server instance")
         for i, slot in enumerate(self.slots):
             if slot is None:
                 self.slots[i] = req
@@ -71,44 +121,56 @@ class Server:
         # feed all but the last prompt token; step() feeds the last one and
         # collects the first prediction (no double-insert into the cache)
         for t in req.prompt[:-1]:
-            self._step_one(slot, int(t))
+            self._step_one(slot, int(t), req.m_active)
 
-    def _step_one(self, slot: int, token: int) -> int:
+    def _step_one(self, slot: int, token: int,
+                  m_active: int | None = None) -> int:
         B = self.max_batch
         tokens = np.zeros((B, 1), np.int32)
         tokens[slot, 0] = token
         batch = {"tokens": jnp.asarray(tokens),
                  "pos": jnp.asarray(self.pos.copy()),
                  "cache": self.cache}
-        logits, self.cache = self._decode(self.params, batch)
+        logits, self.cache = self._decode_for(m_active)(self.params, batch)
         self.pos[slot] += 1
         return int(jnp.argmax(logits[slot, 0]))
 
     # ------------------------------------------------------------- step ---
     def step(self):
-        """One batched decode step for every active slot."""
+        """One batched decode step for every active slot.
+
+        Slots are grouped by their request's ``m_active`` (§IV-D level
+        count); each group runs one batched decode compiled for that count,
+        so a single server round serves high-accuracy and high-throughput
+        requests side by side off the same packed buffers.
+        """
         active = [i for i, r in enumerate(self.slots) if r and not r.done]
         if not active:
             return
         B = self.max_batch
-        tokens = np.zeros((B, 1), np.int32)
+        groups: dict[int | None, list[int]] = {}
         for i in active:
-            r = self.slots[i]
-            tokens[i, 0] = (r.out_tokens[-1] if r.out_tokens
-                            else int(r.prompt[-1]))
-        batch = {"tokens": jnp.asarray(tokens),
-                 "pos": jnp.asarray(self.pos.copy()),
-                 "cache": self.cache}
-        logits, self.cache = self._decode(self.params, batch)
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
-        for i in active:
-            r = self.slots[i]
-            r.out_tokens.append(int(nxt[i]))
-            self.pos[i] += 1
-            if (len(r.out_tokens) >= r.max_new_tokens
-                    or self.pos[i] >= self.max_len - 1):
-                r.done = True
-                self.slots[i] = None if r.done else r
+            groups.setdefault(self._norm_m(self.slots[i].m_active), []).append(i)
+        for m_active, idxs in groups.items():
+            tokens = np.zeros((B, 1), np.int32)
+            for i in idxs:
+                r = self.slots[i]
+                tokens[i, 0] = (r.out_tokens[-1] if r.out_tokens
+                                else int(r.prompt[-1]))
+            batch = {"tokens": jnp.asarray(tokens),
+                     "pos": jnp.asarray(self.pos.copy()),
+                     "cache": self.cache}
+            logits, self.cache = self._decode_for(m_active)(self.params, batch)
+            nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+            for i in idxs:
+                r = self.slots[i]
+                r.out_tokens.append(int(nxt[i]))
+                r.last_logits = np.asarray(logits[i, 0])
+                self.pos[i] += 1
+                if (len(r.out_tokens) >= r.max_new_tokens
+                        or self.pos[i] >= self.max_len - 1):
+                    r.done = True
+                    self.slots[i] = None
 
     def run_until_done(self, max_steps: int = 10_000):
         for _ in range(max_steps):

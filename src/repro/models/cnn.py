@@ -49,11 +49,12 @@ def cnn_a_forward(params, x: jax.Array, quant: QuantConfig = DENSE) -> jax.Array
 
     conv1 7x7 VALID -> 42x42x5, AMU pool 2 -> 21x21x5
     conv2 4x4 VALID -> 18x18x150, AMU pool 6 -> 3x3x150 = 1350
+
+    Each conv+pool stage goes through conv2d_relu_pool, so a binary
+    deployment with quant.fuse_conv runs the fused implicit-GEMM kernel.
     """
-    y = binconv.conv2d(params["conv1"], x, quant=quant)
-    y = binconv.relu_maxpool(y, 2)
-    y = binconv.conv2d(params["conv2"], y, quant=quant)
-    y = binconv.relu_maxpool(y, 6)
+    y = binconv.conv2d_relu_pool(params["conv1"], x, pool=2, quant=quant)
+    y = binconv.conv2d_relu_pool(params["conv2"], y, pool=6, quant=quant)
     y = y.reshape(y.shape[0], -1)
     y = jax.nn.relu(bl.apply_linear(params["fc1"], y, quant))
     y = jax.nn.relu(bl.apply_linear(params["fc2"], y, quant))
@@ -121,11 +122,11 @@ def _depthwise(params, x, stride):
 def mobilenet_forward(params, x: jax.Array, quant: QuantConfig = DENSE):
     """x: [B, R, R, 3] -> logits.  Point-wise convs carry the binary matmuls;
     depth-wise convs are memory-bound (paper §V-A3: D_arch=1 there)."""
-    y = binconv.conv2d(params["stem"], x, stride=2, padding="SAME", quant=quant)
-    y = jax.nn.relu(y)
+    y = binconv.conv2d_relu_pool(params["stem"], x, stride=2, padding="SAME",
+                                 pool=1, quant=quant)
     for i, (stride, _) in enumerate(MOBILENET_BLOCKS):
         y = jax.nn.relu(_depthwise(params[f"dw{i}"], y, stride))
-        y = jax.nn.relu(binconv.conv2d(params[f"pw{i}"], y, quant=quant))
+        y = binconv.conv2d_relu_pool(params[f"pw{i}"], y, pool=1, quant=quant)
     y = jnp.mean(y, axis=(1, 2))  # global average pool (offloaded to CPU in paper)
     return bl.apply_linear(params["head"], y, quant)
 

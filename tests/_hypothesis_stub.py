@@ -1,0 +1,78 @@
+"""Minimal in-repo stand-in for ``hypothesis`` (used when it isn't installed).
+
+The container this suite runs in has no network access, so the dev extra
+(``pip install -e .[dev]``) may not be installable.  conftest.py registers
+this module as ``hypothesis`` in that case, covering exactly the surface the
+tests use: ``@settings(max_examples=..., deadline=...)``, ``@given(**kw)``,
+``st.integers(lo, hi)`` and ``st.sampled_from(seq)``.
+
+Sampling is deterministic (seeded per test name) so runs are reproducible;
+with the real hypothesis installed this module is never imported.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def given(**strategies_kw):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                kw = {k: s.example(rng) for k, s in strategies_kw.items()}
+                try:
+                    fn(**kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (hypothesis stub): {kw}") from e
+
+        # NOT functools.wraps: that sets __wrapped__, which pytest unwraps to
+        # the original signature and then hunts for fixtures named like the
+        # strategy kwargs.  The zero-arg signature must stay visible.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._hypothesis_stub = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -1,10 +1,32 @@
 """Shared pytest config.
 
-jax.clear_caches() between test modules: the XLA CPU JIT accumulates one
-dylib per compiled executable and a multi-hundred-compile session can hit
-"Failed to materialize symbols" — clearing the compile cache per module
-keeps the long full-suite run healthy (observed on jax 0.8.2 cpu).
+Two session-level concerns:
+
+* ``hypothesis`` fallback — the property tests import hypothesis, which the
+  dev extra provides (``pip install -e .[dev]``) but an offline container
+  may lack.  When the real package is missing we register the deterministic
+  stub in ``tests/_hypothesis_stub.py`` under the same name before any test
+  module is collected, so collection never errors on the import.
+
+* jax.clear_caches() between test modules: the XLA CPU JIT accumulates one
+  dylib per compiled executable and a multi-hundred-compile session can hit
+  "Failed to materialize symbols" — clearing the compile cache per module
+  keeps the long full-suite run healthy (observed on jax 0.8.2 cpu).
 """
+import importlib.util
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when installed)
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py"))
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
+
 import jax
 import pytest
 

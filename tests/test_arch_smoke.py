@@ -14,6 +14,9 @@ from repro.models import api
 
 jax.config.update("jax_platform_name", "cpu")
 
+# model-wide sweep over every assigned arch: ~4 min on CPU — nightly tier
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, B=2, S=16, key=0):
     k = jax.random.PRNGKey(key)

@@ -11,6 +11,9 @@ from repro.models import api
 
 jax.config.update("jax_platform_name", "cpu")
 
+# model-wide binarize+forward sweeps: ~3.5 min on CPU — nightly tier
+pytestmark = pytest.mark.slow
+
 
 def _cfg(arch="qwen3_14b", **kw):
     cfg = cb.reduced(cb.get_config(arch)).replace(dtype="float32", **kw)

@@ -1,0 +1,184 @@
+"""Fused implicit-GEMM binary-conv kernel vs the jnp conv oracle, plus the
+conv-path bugfix regressions (im2col SAME parity, odd-group-size blocks).
+
+Mirrors the paper's §V-A2 verification style: the Pallas kernel (interpret
+mode on CPU) must match kernels/ref.py to fp32-accumulation tolerance across
+a shape sweep covering K % 8 != 0, m_active < M, stride 2, SAME/VALID, and
+pool ∈ {1, 2}.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import binarize as bz
+from repro.core import binconv
+from repro.core.binlinear import QuantConfig
+from repro.kernels import binary_conv as bck
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _conv_case(seed, kh, kw, C, D, M, group_size=None):
+    kx, kw_key, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = jax.random.normal(kw_key, (kh, kw, C, D), jnp.float32) * 0.2
+    b = jax.random.normal(kb, (D,), jnp.float32)
+    qc = QuantConfig(mode="binary", M=M, K_iters=6, group_size=group_size)
+    return binconv.binarize_conv_params({"w": w, "b": b}, qc), kx
+
+
+# kh, kw, C, D, H, W, M, stride, padding, pool, m_active
+SWEEP = [
+    (3, 3, 3, 16, 10, 10, 2, 1, "VALID", 1, None),   # C%8!=0: K=27 % 8 != 0
+    (7, 7, 3, 5, 48, 48, 2, 1, "VALID", 2, None),    # CNN-A conv1 + pool
+    (4, 4, 5, 24, 21, 21, 2, 1, "VALID", 2, None),   # even kernel, K=80
+    (3, 3, 8, 12, 9, 9, 3, 1, "SAME", 1, 2),         # SAME + m_active < M
+    (4, 4, 3, 10, 12, 12, 2, 2, "SAME", 1, None),    # even kernel SAME stride 2
+    (5, 5, 4, 9, 11, 11, 3, 2, "VALID", 1, 1),       # stride 2 + m_active=1
+    (1, 1, 16, 24, 8, 8, 2, 1, "VALID", 1, None),    # pointwise (MobileNet pw)
+    (2, 2, 4, 7, 9, 9, 4, 2, "VALID", 2, None),      # stride 2 + pool 2
+]
+
+
+class TestFusedBinaryConvKernel:
+    @pytest.mark.parametrize("kh,kw,C,D,H,W,M,stride,padding,pool,m_active",
+                             SWEEP)
+    def test_matches_conv_oracle(self, kh, kw, C, D, H, W, M, stride, padding,
+                                 pool, m_active):
+        p, kx = _conv_case(kh * 100 + kw * 10 + C, kh, kw, C, D, M)
+        x = jax.random.normal(kx, (2, H, W, C), jnp.float32)
+        got = kops.binary_conv2d(
+            x, p["B_tap_packed"], p["alpha"], p["b"], kh=kh, kw=kw,
+            stride=stride, padding=padding, pool=pool, m_active=m_active,
+            interpret=True)
+        want = kref.fused_binary_conv_relu_pool_ref(
+            x, p["B_packed"], p["alpha"], kh=kh, kw=kw, stride=stride,
+            padding=padding, pool=pool, m_active=m_active, bias=p["b"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_grouped_alpha_odd_group_size(self):
+        """Grouped alpha whose group size is not a multiple of 8."""
+        p, kx = _conv_case(42, 3, 3, 6, 8, 2, group_size=27)  # K=54, G=2
+        x = jax.random.normal(kx, (2, 8, 8, 6), jnp.float32)
+        got = kops.binary_conv2d(x, p["B_tap_packed"], p["alpha"], p["b"],
+                                 kh=3, kw=3, interpret=True)
+        want = kref.fused_binary_conv_relu_pool_ref(
+            x, p["B_packed"], p["alpha"], kh=3, kw=3, bias=p["b"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_repack_taps_matches_direct_packing(self):
+        """repack_taps (flat -> per-tap) agrees with binarize_conv_params."""
+        p, _ = _conv_case(7, 3, 3, 5, 12, 2)
+        via_repack = bck.repack_taps(p["B_packed"], 3, 3, 5)
+        np.testing.assert_array_equal(np.asarray(via_repack),
+                                      np.asarray(p["B_tap_packed"]))
+
+    def test_conv2d_relu_pool_routes_fused(self):
+        """Model-layer routing: fused flag on == fused flag off (unfused)."""
+        p, kx = _conv_case(11, 4, 4, 5, 20, 2)
+        x = jax.random.normal(kx, (2, 12, 12, 5), jnp.float32)
+        qc = QuantConfig(mode="binary", M=2)
+        unfused = binconv.conv2d_relu_pool(p, x, pool=3, quant=qc)
+        fused = binconv.conv2d_relu_pool(
+            p, x, pool=3,
+            quant=qc.replace(fuse_conv=True, use_pallas=True, interpret=True))
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_cnn_a_fused_end_to_end(self):
+        """Whole CNN-A deployment forward: fused conv path == im2col path."""
+        from repro.models import cnn
+
+        params = cnn.init_cnn_a(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 48, 48, 3),
+                              jnp.float32)
+        qc = QuantConfig(mode="binary", M=2, K_iters=4)
+        bp = cnn.binarize_cnn_a(params, qc)
+        ref_logits = cnn.cnn_a_forward(bp, x, qc)
+        fused_logits = cnn.cnn_a_forward(
+            bp, x, qc.replace(fuse_conv=True, use_pallas=True, interpret=True))
+        np.testing.assert_allclose(np.asarray(fused_logits),
+                                   np.asarray(ref_logits),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestIm2colSamePadding:
+    """im2col's SAME padding must match jax.lax.conv (asymmetric for even
+    kernels — the seed padded kh//2 on both sides, shifting even-kernel
+    convs like CNN-A's 4x4 conv2 by half a pixel and changing the shape)."""
+
+    @pytest.mark.parametrize("kh,kw,stride", [
+        (3, 3, 1), (4, 4, 1), (4, 4, 2), (2, 2, 2), (5, 5, 2), (7, 7, 1),
+        (2, 3, 1),
+    ])
+    def test_same_parity_vs_lax_conv(self, kh, kw, stride):
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 9, 11, 3),
+                              jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(3), (kh, kw, 3, 5),
+                              jnp.float32)
+        patches = binconv.im2col(x, kh, kw, stride, "SAME")
+        got = patches.reshape(*patches.shape[:3], -1) @ w.reshape(-1, 5)
+        want = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("kh,kw,stride", [(3, 3, 1), (4, 4, 2)])
+    def test_valid_parity_vs_lax_conv(self, kh, kw, stride):
+        x = jax.random.normal(jax.random.PRNGKey(4), (1, 10, 10, 2),
+                              jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(5), (kh, kw, 2, 4),
+                              jnp.float32)
+        patches = binconv.im2col(x, kh, kw, stride, "VALID")
+        got = patches.reshape(*patches.shape[:3], -1) @ w.reshape(-1, 4)
+        want = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestOddGroupSizeMatmul:
+    """_pick_block regression: group sizes with no multiple-of-8 divisor used
+    to trip the kernel's ``group_size % bk`` assert; now they take the
+    single-K-block grouped-alpha path."""
+
+    @pytest.mark.parametrize("K,group_size,M", [(48, 12, 2), (30, 15, 3),
+                                                (72, 36, 2)])
+    def test_pallas_matches_ref(self, K, group_size, M):
+        kx, kw = jax.random.split(jax.random.PRNGKey(K + group_size))
+        x = jax.random.normal(kx, (16, K), jnp.float32)
+        W = jax.random.normal(kw, (K, 24), jnp.float32)
+        approx = bz.algorithm2(W, M=M, K_iters=8, group_size=group_size)
+        if K % 8:
+            pad = (-K) % 8
+            B = jnp.concatenate(
+                [approx.B, jnp.ones((M, pad, 24), jnp.int8)], axis=1)
+        else:
+            B = approx.B
+        packed = bz.pack_bits(B)
+        got = kops.binary_matmul(x, packed, approx.alpha, K=K,
+                                 group_size=group_size, interpret=True)
+        want = kref.binary_matmul_ref(x, packed, approx.alpha, K=K,
+                                      group_size=group_size)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_odd_group_with_m_active(self):
+        kx, kw = jax.random.split(jax.random.PRNGKey(9))
+        x = jax.random.normal(kx, (8, 48), jnp.float32)
+        W = jax.random.normal(kw, (48, 16), jnp.float32)
+        approx = bz.algorithm2(W, M=3, K_iters=8, group_size=12)
+        packed = bz.pack_bits(approx.B)
+        got = kops.binary_matmul(x, packed, approx.alpha, K=48, group_size=12,
+                                 m_active=2, interpret=True)
+        want = kref.binary_matmul_ref(x, packed, approx.alpha, K=48,
+                                      group_size=12, m_active=2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import base as cb
+from repro.core.binlinear import QuantConfig
 from repro.data.tokens import SyntheticTokens
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
@@ -174,6 +175,50 @@ class TestServer:
         for r in reqs:
             assert len(r.out_tokens) == 5
             assert all(0 <= t < cfg.vocab for t in r.out_tokens)
+
+    def test_m_active_per_request_reaches_decode(self):
+        """Paper §IV-D through the Server: Request.m_active must actually
+        reach the jitted decode step — serving the same prompt with 1 level
+        vs all levels yields different logits off the same packed buffers."""
+        cfg = _tiny_cfg()
+        qc = QuantConfig(mode="binary", M=2, K_iters=4)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        bp = api.binarize_model_params(cfg, params, qc=qc)
+        srv = Server(cfg.replace(quant=qc), bp, max_batch=4, max_len=32)
+        prompt = np.array([1, 2, 3], np.int32)
+        r_full = Request(prompt=prompt.copy(), max_new_tokens=1)  # all levels
+        r_fast = Request(prompt=prompt.copy(), max_new_tokens=1, m_active=1)
+        r_expl = Request(prompt=prompt.copy(), max_new_tokens=1, m_active=2)
+        for r in (r_full, r_fast, r_expl):
+            assert srv.admit(r)
+        srv.run_until_done()
+        assert r_full.last_logits is not None
+        assert r_fast.last_logits is not None
+        # fewer levels -> different logits (the switch is observable)
+        assert not np.allclose(r_fast.last_logits, r_full.last_logits)
+        # explicit m_active == M is the same computation as the default —
+        # and shares the default's compiled decode (group-key normalization)
+        np.testing.assert_allclose(r_expl.last_logits, r_full.last_logits,
+                                   rtol=1e-5, atol=1e-5)
+        assert set(srv._decode_fns) == {None, 1}
+
+    def test_mixed_m_active_rejected_for_recurrent_families(self):
+        """SSM/conv state advances for every batch row each decode, so mixed
+        per-request level counts would corrupt non-group slots' state —
+        admit() must refuse rather than serve wrong tokens."""
+        cfg = cb.reduced(cb.get_config("mamba2_2_7b")).replace(dtype="float32")
+        qc = QuantConfig(mode="binary", M=2, K_iters=2)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        bp = api.binarize_model_params(cfg, params, qc=qc)
+        srv = Server(cfg.replace(quant=qc), bp, max_batch=2, max_len=16)
+        assert srv.admit(Request(prompt=np.array([1, 2], np.int32),
+                                 max_new_tokens=1))
+        with pytest.raises(ValueError, match="recurrent state"):
+            srv.admit(Request(prompt=np.array([1, 2], np.int32),
+                              max_new_tokens=1, m_active=1))
+        # same level count is fine
+        assert srv.admit(Request(prompt=np.array([1, 2], np.int32),
+                                 max_new_tokens=1, m_active=2))
 
     def test_decode_matches_forward(self):
         """Step-wise decode with cache reproduces teacher-forced logits."""

@@ -16,6 +16,7 @@ MODULES = [
     ("table4", "benchmarks.table4_resources"),
     ("kernel", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline_bench"),
+    ("serve", "benchmarks.serve_bench"),
 ]
 
 

@@ -1,0 +1,59 @@
+"""Serving admission-latency bench: bulk prefill vs token-wise warmup.
+
+Admission used to cost O(prompt_len) jitted decode steps per request
+(token-wise cache warmup); bulk prefill replaces that with ONE forward pass
+plus a cache scatter (launch/serve.py).  CPU wall times are not
+TPU-indicative; the structural column is ``device_calls`` — the number of
+device programs an admission dispatches, recorded from ``Server.stats``
+(1 bulk prefill vs prompt_len-1 token-wise steps).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import base as cb
+from repro.launch.serve import Request, Server
+from repro.models import api
+
+
+def _admit_time(srv: Server, prompt: np.ndarray, iters: int) -> float:
+    # warm the jit caches with one throwaway admission, then time re-admits
+    srv.admit(Request(prompt=prompt.copy(), max_new_tokens=1))
+    srv.slots = [None] * srv.max_batch
+    t0 = time.time()
+    for _ in range(iters):
+        srv.admit(Request(prompt=prompt.copy(), max_new_tokens=1))
+        srv.slots = [None] * srv.max_batch
+    return (time.time() - t0) / iters
+
+
+def run(quick: bool = False):
+    rows = []
+    iters = 2 if quick else 3
+    prompt_len = 12 if quick else 24
+    cases = [("gemma_2b", "dense"), ("mamba2_2_7b", "ssm")]
+    if quick:
+        cases = cases[:1]
+    for arch, fam in cases:
+        cfg = cb.reduced(cb.get_config(arch)).replace(dtype="float32")
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        prompt = (np.arange(prompt_len, dtype=np.int32) % cfg.vocab) + 1
+        for mode in ("bulk", "tokenwise"):
+            srv = Server(cfg, params, max_batch=2, max_len=2 * prompt_len,
+                         prefill=mode)
+            secs = _admit_time(srv, prompt, iters)
+            per_admit = (1 if mode == "bulk"
+                         else srv.stats["tokenwise_prefill_steps"] // (iters + 1))
+            rows.append((
+                f"serve_admit_{mode}_{fam}", secs,
+                f"prompt_len={prompt_len} device_calls_per_admit={per_admit}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, secs, derived in run():
+        print(f"{name},{secs * 1e6:.0f},{derived}")

@@ -2,11 +2,16 @@
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Binarizes a reduced gemma model into packed deployment form and serves a
-mixed batch of requests with continuous batching: high-accuracy requests
-(all M levels) and high-throughput requests (m_active=1) side by side in the
-same server, off the same packed buffers — the paper's §IV-D runtime switch,
+Binarizes a reduced model into packed deployment form and serves a mixed
+batch of requests with continuous batching: high-accuracy requests (all M
+levels) and high-throughput requests (m_active=1) side by side in the same
+server, off the same packed buffers — the paper's §IV-D runtime switch,
 selected per request via ``Request.m_active``.
+
+Admission uses bulk prefill (one forward pass + cache scatter per request —
+see ``Server.stats``), and per-slot state masking lets recurrent-state
+families (here: mamba2) serve mixed level counts too, which PR 1 had to
+reject at admit time.
 """
 import numpy as np
 import jax
@@ -17,8 +22,8 @@ from repro.launch.serve import Request, Server
 from repro.models import api
 
 
-def main():
-    cfg = cb.reduced(cb.get_config("gemma_2b")).replace(dtype="float32")
+def serve_one(arch: str, label: str):
+    cfg = cb.reduced(cb.get_config(arch)).replace(dtype="float32")
     params = api.init_params(cfg, jax.random.PRNGKey(0))
 
     qc = QuantConfig(mode="binary", M=2, K_iters=8)
@@ -35,11 +40,20 @@ def main():
     for r in reqs:
         assert srv.admit(r)
     srv.run_until_done()
+    print(f"--- {label} ({arch}, family={cfg.family}) ---")
     for i, r in enumerate(reqs):
-        label = ("high-throughput (m=1)" if r.m_active == 1
-                 else "high-accuracy (all levels)")
-        print(f"req{i} [{label}] prompt={list(map(int, prompts[i]))} "
+        mode = ("high-throughput (m=1)" if r.m_active == 1
+                else "high-accuracy (all levels)")
+        print(f"req{i} [{mode}] prompt={list(map(int, prompts[i]))} "
               f"-> {r.out_tokens}")
+    print(f"admission: {srv.stats['bulk_prefills']} bulk prefill passes, "
+          f"{srv.stats['tokenwise_prefill_steps']} token-wise steps")
+
+
+def main():
+    serve_one("gemma_2b", "transformer, positional KV cache")
+    # recurrent state + mixed m_active: needs the per-slot update mask
+    serve_one("mamba2_2_7b", "ssm, masked recurrent state")
 
 
 if __name__ == "__main__":

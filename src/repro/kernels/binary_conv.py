@@ -16,15 +16,44 @@ here the kernel does the same job in VMEM:
      == ReLU then pool by commutativity) before the HBM write-back, so the
      output stream is already pooled (pool² fewer bytes).
 
-Weight layout: the flat ``B_packed [M, ceil(K/8), D]`` byte stream crosses
-spatial-tap boundaries whenever C % 8 != 0, so the conv kernel uses a per-tap
-repacking ``B_tap_packed [M, kh·kw, ceil(C/8), D]`` (each tap's C-slice padded
-to a byte boundary; ``repack_taps`` converts, binconv.binarize_conv_params
-emits it directly).  Overhead: at most 7 bits per (level, tap, channel).
+``B_tap_packed`` weight layout (byte-aligned per spatial tap)
+-------------------------------------------------------------
+The flat ``B_packed [M, ceil(K/8), D]`` byte stream (K = kh·kw·C row-major
+over (tap_i, tap_j, c)) crosses spatial-tap boundaries whenever C % 8 != 0,
+which would force the kernel to do cross-byte bit arithmetic per tap.  The
+conv kernel therefore consumes a per-tap repacking
 
+    B_tap_packed [M, kh·kw, ceil(C/8), D]   uint8
+
+where ``B_tap_packed[m, t, c8, d]`` holds input channels ``8*c8 .. 8*c8+7``
+of filter d's level-m ±1 weights at spatial tap ``t = i*kw + j`` (row-major
+over the kh×kw window), **LSB-first** like the matmul kernel: bit j == 1
+iff the ±1 weight for channel ``8*c8 + j`` is +1.  Each tap's C-slice is
+padded to its own byte boundary with +1 bits; the kernel slices the padded
+channels off right after unpacking (``w[:, :C, :]``), so their value never
+matters.  Overhead: at most 7 bits per (level, tap, filter).
+``pack_taps`` builds the layout from ±1 tensors, ``repack_taps`` converts a
+flat ``B_packed``, and ``binconv.binarize_conv_params`` emits it directly —
+the tests' jnp oracle (kernels/ref.py) consumes the *flat* layout, which is
+what keeps the two packings cross-checked.
+
+VMEM blocking
+-------------
 Grid: (B, D/BD) — one program per (image, output-channel tile).  The spatial
-extent of one image lives in VMEM whole; D is tiled MXU-style.  alpha/bias/
-weights are broadcast along the batch grid dim, x along the D grid dim.
+extent of one image lives in VMEM whole; D is tiled MXU-style (BD = 128 by
+default, shrunk for small D).  alpha/bias/weights are broadcast along the
+batch grid dim, x along the D grid dim.  Per-program working set:
+
+    x tile        Hp·Wp·C·4          (padded input image, fp32)
+    patches       U·V·kh·kw·C·4      (implicit im2col, VMEM-only value)
+    weight tile   M·kh·kw·ceil(C/8)·BD   (bit-packed)
+    acc/out       U·V·BD·4           (epilogue shrinks the HBM write pool²)
+
+Whole-image blocking bounds this by the feature-map size, which fits the
+paper's CNN-A/MobileNet-scale layers; row-tiling the U axis for large
+feature maps is a ROADMAP item.  ``benchmarks/kernel_bench.py
+conv_tile_stats`` prints the analytic HBM bytes per tile for the fused vs
+explicit-im2col paths from the same quantities.
 """
 from __future__ import annotations
 

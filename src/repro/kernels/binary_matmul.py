@@ -10,7 +10,22 @@ computation order: per K-tile, unpack the packed bits to ±1 in VMEM, run one
 MXU matmul per level, and apply the alpha scaling as a VPU epilogue while
 accumulating in fp32 (the MULW=28 accumulator analogue, strictly wider).
 
-Tiling (BlockSpec, all multiples of MXU-friendly sizes):
+Packed weight layout (``B_packed``, produced by ``core.binarize.pack_bits``)
+----------------------------------------------------------------------------
+``B_packed[m, k8, n]`` is a uint8 holding reduction rows ``8*k8 .. 8*k8+7``
+of level m's ±1 matrix for output channel n, **LSB-first**:
+
+    bit j of B_packed[m, k8, n]  ==  1  iff  B_m[8*k8 + j, n] == +1
+    (so +1 -> bit 1, -1 -> bit 0;  row index = 8*k8 + j, j = 0..7)
+
+K is padded up to a byte boundary *upstream* (``core.binarize.pack``/
+``binlinear.binarize_params`` append +1 rows); the padding rows are
+harmless because the matching x columns are zero.  Scales live separately
+as ``alpha[M, G, N]`` fp32 with ``G = K / group_size`` groups along the
+reduction axis (G == 1 is the paper's per-output-channel scheme).
+
+VMEM blocking (BlockSpec, all multiples of MXU-friendly sizes)
+--------------------------------------------------------------
     x        [T, K]            -> blocks [BT, BK]
     B_packed [M, K/8, N] uint8 -> blocks [m_active, BK/8, BN]
     alpha    [M, G, N]         -> blocks [m_active, 1, BN]   (G = K/group_size)
@@ -18,7 +33,14 @@ Tiling (BlockSpec, all multiples of MXU-friendly sizes):
 
 Grid: (T/BT, N/BN, K/BK) with the K dimension innermost ("arbitrary"
 sequential), accumulating into the output block; alpha's group index is
-derived from the K block index (requires group_size % BK == 0 or BK == K).
+derived from the K block index (requires group_size % BK == 0 or BK == K —
+otherwise ops.py falls back to the single-K-block mode where the whole
+padded K is one block and alpha is folded into the unpacked weights per
+row).  Per-tile VMEM working set (fp32 x, defaults BT=BN=128, BK=256,
+M=2): ``BT*BK*4 + M*(BK/8)*BN + BT*BN*4`` ≈ 128 KiB + 8 KiB + 64 KiB —
+comfortably inside one core's ~16 MiB, leaving headroom for double
+buffering; ``benchmarks/kernel_bench.py tile_stats`` prints the same
+formula per candidate block shape.
 
 The per-level unpack costs BK/8 * BN uint8 VMEM loads per (BK x BN) tile —
 1/16 the bytes of a bf16 weight tile, which is exactly the paper's

@@ -11,16 +11,29 @@ Because m_active selects how many statically-unrolled level matmuls run, it
 is a compile-time constant of the decode step: the server keeps one jitted
 decode function per distinct m_active it has seen (at most M+1 of them) and,
 each step, groups the active slots by their requested level count and runs
-one batched decode per group.  Slots outside the running group see a zero
-token; the cache rows that writes are transient — they always land at a
-position the owning slot has not yet attended past, and that slot's next
-real decode overwrites the row before attending to it (the same mechanism
-token-wise prefill relies on).  This invariant holds for positional KV
-caches only; recurrent-state families are rejected at admit time.
+one batched decode per group.  Two mechanisms keep non-group slots' cached
+state intact while a group runs:
+
+* positional KV caches (transformer/hybrid attention): the zero-token rows a
+  grouped decode writes for non-group slots are *transient* — they always
+  land at a position the owning slot has not yet attended past, and that
+  slot's next real decode overwrites the row before attending to it.
+* recurrent state (ssm/hybrid mamba): the decode step takes a per-slot
+  ``update_mask`` ([B] bool) and keeps masked rows' ssm/conv state
+  bit-exact, so mixed per-request level counts serve for every family
+  (docs/serving.md §masking).
+
+Admission runs **bulk prefill**: one ``api.prefill`` forward over the prompt
+(B=1) emits logits *and* the decode cache, which ``api.scatter_cache``
+writes into the slot's row of the serving arrays — one device program
+instead of O(prompt_len) decode steps, and by construction it cannot touch
+concurrent slots' state.  Families without a prefill path (encdec/vlm) fall
+back to masked token-wise warmup (``prefill="tokenwise"`` forces the
+fallback everywhere; the parity tests and the admission-latency benchmark
+compare both).
 
 `Server` implements continuous batching over a request queue: prefill on
-arrival (teacher-forced forward to warm the cache), then step-wise batched
-decode; slots free as sequences finish.
+arrival, then step-wise batched decode; slots free as sequences finish.
 """
 from __future__ import annotations
 
@@ -47,23 +60,48 @@ class Request:
 
 
 class Server:
-    """Single-host batched decode server (greedy sampling)."""
+    """Single-host batched decode server (greedy sampling).
+
+    ``prefill`` selects the admission path: ``"auto"`` (default) uses bulk
+    prefill when the family supports it, ``"bulk"`` requires it,
+    ``"tokenwise"`` forces the step-wise reference path (used by the parity
+    tests and the admission-latency benchmark).  ``stats`` counts device
+    programs per path: ``bulk_prefills`` (one per bulk admission),
+    ``tokenwise_prefill_steps`` (one per warmed prompt token) and
+    ``decode_steps`` (one per served group per round).
+    """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
-                 max_len: int = 256):
+                 max_len: int = 256, prefill: str = "auto"):
         from repro.models import common as cm
 
         cm.set_axis_rules(None)  # single-host serve: no mesh constraints
+        if prefill not in ("auto", "bulk", "tokenwise"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        if prefill == "bulk" and cfg.family not in api.BULK_PREFILL_FAMILIES:
+            raise ValueError(
+                f"bulk prefill is not implemented for family={cfg.family!r}")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.prefill_mode = prefill
         self.cache = api.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)
         self.slots: list[Request | None] = [None] * max_batch
         # one jitted decode per distinct m_active (§IV-D: the level count is
-        # static — it sets how many unrolled level matmuls the step runs)
+        # static — it sets how many unrolled level matmuls the step runs);
+        # ditto for the prefill pass, which runs the same binary linears
         self._decode_fns: dict[int | None, Callable] = {}
+        self._prefill_fns: dict[int | None, Callable] = {}
+        self._scatter_fn = jax.jit(functools.partial(api.scatter_cache, cfg))
+        self.stats = {"bulk_prefills": 0, "tokenwise_prefill_steps": 0,
+                      "decode_steps": 0}
+
+    @property
+    def _bulk(self) -> bool:
+        return (self.prefill_mode != "tokenwise"
+                and self.cfg.family in api.BULK_PREFILL_FAMILIES)
 
     def _norm_m(self, m_active: int | None) -> int | None:
         """Canonical per-request level count: clamp to [1, M] (a request
@@ -88,21 +126,38 @@ class Server:
             self._decode_fns[m_active] = fn
         return fn
 
+    def _prefill_for(self, m_active: int | None) -> Callable:
+        m_active = self._norm_m(m_active)
+        fn = self._prefill_fns.get(m_active)
+        if fn is None:
+            cfg = self.cfg
+            if m_active is not None:
+                cfg = cfg.replace(quant=cfg.quant.replace(m_active=m_active))
+            fn = jax.jit(functools.partial(api.prefill, cfg,
+                                           max_len=self.max_len))
+            self._prefill_fns[m_active] = fn
+        return fn
+
     # ------------------------------------------------------------ admit ---
     def admit(self, req: Request) -> bool:
-        if self.cfg.family in ("ssm", "hybrid"):
-            # Recurrent-state families update ssm/conv state unconditionally
-            # for every batch row, so the transient-cache-row argument above
-            # does not apply: a grouped decode would advance non-group
-            # slots' recurrent state with pad tokens.  One level count per
-            # Server until masked state updates land (ROADMAP).
-            keys = {self._norm_m(r.m_active)
-                    for r in self.slots if r and not r.done}
-            if keys and self._norm_m(req.m_active) not in keys:
-                raise ValueError(
-                    "mixed per-request m_active is not supported for "
-                    f"family={self.cfg.family!r} (recurrent state); serve "
-                    "one level count per Server instance")
+        """Place ``req`` in a free slot and prefill it; False when full.
+
+        Raises ValueError on malformed requests (empty/oversized prompt, or
+        ``m_active < 1`` — the kernel path would silently clamp a 0 to one
+        level, which is never what the caller meant; values *above* the
+        packed level count M serve full accuracy, documented clamp).
+        """
+        if req.m_active is not None and int(req.m_active) < 1:
+            raise ValueError(
+                f"Request.m_active must be >= 1 (got {req.m_active}); use "
+                "None to serve all packed levels")
+        n_prompt = int(np.asarray(req.prompt).size)
+        if n_prompt < 1:
+            raise ValueError("Request.prompt must hold at least one token")
+        if n_prompt + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({n_prompt}) + max_new_tokens ({req.max_new_tokens})"
+                f" exceeds max_len={self.max_len}")
         for i, slot in enumerate(self.slots):
             if slot is None:
                 self.slots[i] = req
@@ -111,28 +166,43 @@ class Server:
         return False
 
     def _prefill(self, slot: int, req: Request):
-        """Feed the prompt token-by-token through decode_step (cache warmup).
+        """Warm slot ``slot``'s cache over the prompt.
 
-        (Bulk prefill via forward() + cache scatter is the optimized path —
-        see EXPERIMENTS.md §Perf; token-wise warmup keeps the reference
-        implementation simple and bit-identical.)
+        Bulk path: one ``api.prefill`` forward over ``prompt[:-1]`` (B=1),
+        then scatter the returned cache into the slot's row — admission is
+        O(1) device programs instead of O(prompt_len).  step() feeds the
+        last prompt token and collects the first prediction (no
+        double-insert into the cache).  Token-wise fallback feeds the same
+        tokens through the masked decode step.
         """
         self.pos[slot] = 0
-        # feed all but the last prompt token; step() feeds the last one and
-        # collects the first prediction (no double-insert into the cache)
-        for t in req.prompt[:-1]:
-            self._step_one(slot, int(t), req.m_active)
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if prompt.size <= 1:
+            return
+        if self._bulk:
+            fn = self._prefill_for(req.m_active)
+            _, part = fn(self.params, jnp.asarray(prompt[None, :-1]))
+            self.cache = self._scatter_fn(self.cache, slot, part)
+            self.pos[slot] = prompt.size - 1
+            self.stats["bulk_prefills"] += 1
+        else:
+            for t in prompt[:-1]:
+                self._step_one(slot, int(t), req.m_active)
 
     def _step_one(self, slot: int, token: int,
                   m_active: int | None = None) -> int:
         B = self.max_batch
         tokens = np.zeros((B, 1), np.int32)
         tokens[slot, 0] = token
+        mask = np.zeros((B,), bool)
+        mask[slot] = True
         batch = {"tokens": jnp.asarray(tokens),
                  "pos": jnp.asarray(self.pos.copy()),
-                 "cache": self.cache}
+                 "cache": self.cache,
+                 "update_mask": jnp.asarray(mask)}
         logits, self.cache = self._decode_for(m_active)(self.params, batch)
         self.pos[slot] += 1
+        self.stats["tokenwise_prefill_steps"] += 1
         return int(jnp.argmax(logits[slot, 0]))
 
     # ------------------------------------------------------------- step ---
@@ -142,7 +212,9 @@ class Server:
         Slots are grouped by their request's ``m_active`` (§IV-D level
         count); each group runs one batched decode compiled for that count,
         so a single server round serves high-accuracy and high-throughput
-        requests side by side off the same packed buffers.
+        requests side by side off the same packed buffers.  The group's
+        ``update_mask`` keeps recurrent state of non-group slots bit-exact
+        (positional KV rows rely on the transient-row invariant instead).
         """
         active = [i for i, r in enumerate(self.slots) if r and not r.done]
         if not active:
@@ -153,14 +225,18 @@ class Server:
             groups.setdefault(self._norm_m(self.slots[i].m_active), []).append(i)
         for m_active, idxs in groups.items():
             tokens = np.zeros((B, 1), np.int32)
+            mask = np.zeros((B,), bool)
             for i in idxs:
                 r = self.slots[i]
                 tokens[i, 0] = (r.out_tokens[-1] if r.out_tokens
                                 else int(r.prompt[-1]))
+                mask[i] = True
             batch = {"tokens": jnp.asarray(tokens),
                      "pos": jnp.asarray(self.pos.copy()),
-                     "cache": self.cache}
+                     "cache": self.cache,
+                     "update_mask": jnp.asarray(mask)}
             logits, self.cache = self._decode_for(m_active)(self.params, batch)
+            self.stats["decode_steps"] += 1
             nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
             for i in idxs:
                 r = self.slots[i]

@@ -165,26 +165,36 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int):
 
 
 def decode_step(cfg: ArchConfig, params, batch):
-    """batch: tokens [B,1], pos [B], cache -> (logits [B,1,V], new cache)."""
+    """batch: tokens [B,1], pos [B], cache -> (logits [B,1,V], new cache).
+
+    An optional ``batch["update_mask"]`` ([B] bool) gates *recurrent* state
+    write-back per batch row for ssm/hybrid (rows outside a serving group
+    keep their state bit-exact; their logits are garbage and ignored).
+    Positional KV caches need no mask — see launch/serve.py's transient-row
+    invariant — so the other families ignore it.
+    """
     tokens, pos, cache = batch["tokens"], batch["pos"], batch["cache"]
+    update_mask = batch.get("update_mask")
     if cfg.family in ("dense", "moe", "vlm"):
         return tf_mod.lm_decode_step(params, cfg, tokens, pos, cache)
     if cfg.family == "ssm":
-        return _ssm_decode(params, cfg, tokens, cache)
+        return _ssm_decode(params, cfg, tokens, cache, update_mask=update_mask)
     if cfg.family == "hybrid":
-        return hybrid_mod.hybrid_decode_step(params, cfg, tokens, pos, cache)
+        return hybrid_mod.hybrid_decode_step(params, cfg, tokens, pos, cache,
+                                             update_mask=update_mask)
     if cfg.family == "encdec":
         return encdec_mod.encdec_decode_step(params, cfg, tokens, pos, cache)
     raise ValueError(cfg.family)
 
 
-def _ssm_decode(params, cfg: ArchConfig, tokens, cache):
+def _ssm_decode(params, cfg: ArchConfig, tokens, cache, update_mask=None):
     x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
 
     def body(carry, inp):
         layer, lc = inp
         h = cm.rms_norm(layer["norm"], carry, cfg.norm_eps)
-        d, nc = ssm_mod.mamba2_decode(layer["block"], h, cfg, lc)
+        d, nc = ssm_mod.mamba2_decode(layer["block"], h, cfg, lc,
+                                      update_mask=update_mask)
         return carry + d, nc
 
     if cfg.scan_layers:
@@ -199,6 +209,71 @@ def _ssm_decode(params, cfg: ArchConfig, tokens, cache):
         new_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
     x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
     return cm.unembed(params["embed"], x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# bulk prefill (serving admission path)
+# ---------------------------------------------------------------------------
+
+# families with a forward() + cache-emit prefill; others (encdec/vlm carry
+# side inputs the serving engine does not model yet) fall back to token-wise
+BULK_PREFILL_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+def prefill(cfg: ArchConfig, params, tokens, *, max_len: int):
+    """Bulk prefill: tokens [B, S] -> (logits [B, S, V], decode cache).
+
+    One full-sequence forward that also emits the decode cache (shaped like
+    ``cache_specs(cfg, B, max_len)``) with positions 0..S-1 populated —
+    semantically equivalent to S ``decode_step`` calls but a single device
+    program.  The serving engine runs this at admission with B=1 and
+    scatters the result into its slot arrays (:func:`scatter_cache`), so
+    admitting a request costs one forward pass instead of O(prompt_len)
+    decode steps and never touches concurrent slots' state.
+    """
+    if cfg.family in ("dense", "moe"):
+        return tf_mod.lm_prefill(params, cfg, tokens, max_len=max_len)
+    if cfg.family == "ssm":
+        return _ssm_prefill(params, cfg, tokens)
+    if cfg.family == "hybrid":
+        return hybrid_mod.hybrid_prefill(params, cfg, tokens, max_len=max_len)
+    raise NotImplementedError(
+        f"bulk prefill not implemented for family={cfg.family!r}")
+
+
+def _ssm_prefill(params, cfg: ArchConfig, tokens):
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+
+    def body(carry, layer):
+        h = cm.rms_norm(layer["norm"], carry, cfg.norm_eps)
+        d, c = ssm_mod.mamba2_prefill(layer["block"], h, cfg)
+        return carry + d, c
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, params["mamba_layers"])
+    else:
+        outs = []
+        for i in range(cfg.n_layers):
+            layer = jax.tree.map(lambda t: t[i], params["mamba_layers"])
+            x, c = body(x, layer)
+            outs.append(c)
+        caches = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+    x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return cm.unembed(params["embed"], x), caches
+
+
+def scatter_cache(cfg: ArchConfig, cache, slot, part):
+    """Write a B=1 prefill cache into batch row ``slot`` of a serving cache.
+
+    ``cache`` leaves are [L, B, ...] (stacked layers / attention points);
+    ``part`` is the matching tree from :func:`prefill` with B=1.  Only row
+    ``slot`` is written — concurrent slots' rows are untouched by
+    construction.
+    """
+    if cfg.family not in BULK_PREFILL_FAMILIES:
+        raise NotImplementedError(cfg.family)
+    return jax.tree.map(lambda full, p: full.at[:, slot].set(p[:, 0]),
+                        cache, part)
 
 
 # ---------------------------------------------------------------------------

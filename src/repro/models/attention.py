@@ -122,9 +122,14 @@ def attn_forward(params, x, cfg: ArchConfig, *, positions=None, mask=None):
 
 # --- decode ---------------------------------------------------------------
 
+def _cache_window(cfg: ArchConfig, max_len: int) -> int:
+    """Cache rows per slot: the sliding window caps the rolling cache."""
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
 def attn_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
     hd = cfg.resolved_head_dim
-    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    W = _cache_window(cfg, max_len)
     dt = cfg.jnp_dtype
     spec = {
         "k": jax.ShapeDtypeStruct((batch, W, cfg.n_kv_heads, hd), dt),
@@ -141,6 +146,54 @@ def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int):
         if s.dtype != jnp.int32 else -jnp.ones(s.shape, jnp.int32),
         attn_cache_specs(cfg, batch, max_len),
     )
+
+
+def attn_prefill(params, x, cfg: ArchConfig, *, max_len: int,
+                 positions=None, mask=None):
+    """Full-sequence attention that also emits the decode-cache state.
+
+    x: [B, S, D] -> (y [B, S, D], cache leaf shaped like
+    ``attn_cache_specs(cfg, B, max_len)``) with k/v for positions 0..S-1
+    already written — the bulk-prefill path: one pass instead of S decode
+    steps.  Requires S <= max_len (the server admits under this bound).
+    For sliding-window caches only the last ``W`` tokens are written (older
+    ones could never be attended to again), at their rolling slots
+    ``pos % W`` with ``slot_pos`` bookkeeping matching token-wise decode.
+
+    Scores are materialized whole ([B, H, S, S]) rather than query-chunked
+    like attn_forward's ``attn_chunk`` path: admission runs at B=1 with
+    S < max_len, so the score tensor is bounded by the server's max_len².
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if mask is None:
+        mask = cm.causal_mask(S, cfg.sliding_window)
+    logits = _gqa_scores(q, k, cfg)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    weights = jax.nn.softmax(logits, axis=-1)
+    o = _gqa_out(weights, v, cfg).astype(x.dtype)
+    y = cm.linear(params["wo"], o, cfg.quant)
+
+    W = _cache_window(cfg, max_len)
+    dt = cfg.jnp_dtype
+    ck = jnp.zeros((B, W, cfg.n_kv_heads, k.shape[-1]), dt)
+    cv = jnp.zeros_like(ck)
+    if cfg.sliding_window:
+        n = min(S, W)
+        ts = jnp.arange(S - n, S)
+        slots = ts % W
+        cache = {
+            "k": ck.at[:, slots].set(k[:, S - n:].astype(dt)),
+            "v": cv.at[:, slots].set(v[:, S - n:].astype(dt)),
+            "slot_pos": (-jnp.ones((B, W), jnp.int32)).at[:, slots].set(
+                jnp.broadcast_to(ts.astype(jnp.int32), (B, n))),
+        }
+    else:
+        cache = {"k": ck.at[:, :S].set(k.astype(dt)),
+                 "v": cv.at[:, :S].set(v.astype(dt))}
+    return y, cache
 
 
 def attn_decode(params, x, cfg: ArchConfig, cache, pos):
@@ -258,6 +311,47 @@ def mla_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
 def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                         mla_cache_specs(cfg, batch, max_len))
+
+
+def mla_prefill(params, x, cfg: ArchConfig, *, max_len: int,
+                positions=None, mask=None):
+    """Full-sequence MLA that also emits the latent decode cache.
+
+    Mirrors :func:`mla_forward` (materialized per-head k/v); the cache is
+    the absorbed-form decode state — per-position latents ``c_kv``/``k_rope``
+    for 0..S-1, zero-padded to ``max_len``.  Requires S <= max_len.
+    """
+    B, S, _ = x.shape
+    H, qk, r, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_queries(params, x, cfg, positions)
+    c_kv, k_rope = _mla_latents(params, x, cfg, positions)
+    k_nope = cm.linear(params["wuk"], c_kv, cfg.quant).reshape(B, S, H, qk)
+    v = cm.linear(params["wuv"], c_kv, cfg.quant).reshape(B, S, H, vd)
+    scale = 1.0 / jnp.sqrt(qk + r).astype(jnp.float32)
+    logits = (
+        jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    if mask is None:
+        mask = cm.causal_mask(S)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqs,bshd->bqhd", w, v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, S, H * vd).astype(x.dtype)
+    y = cm.linear(params["wo"], o, cfg.quant)
+    dt = cfg.jnp_dtype
+    cache = {
+        "c_kv": jnp.zeros((B, max_len, cfg.kv_lora_rank), dt)
+                   .at[:, :S].set(c_kv.astype(dt)),
+        "k_rope": jnp.zeros((B, max_len, cfg.qk_rope_dim), dt)
+                     .at[:, :S].set(k_rope.astype(dt)),
+    }
+    return y, cache
 
 
 def mla_decode(params, x, cfg: ArchConfig, cache, pos):

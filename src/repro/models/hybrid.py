@@ -105,7 +105,6 @@ def hybrid_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
             mamba_one),
         "attn": jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((n_pts, *s.shape), s.dtype), attn_one),
-        "x0": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), cfg.jnp_dtype),
     }
 
 
@@ -130,7 +129,14 @@ def _shared_block_decode(shared, x, x0, cfg: ArchConfig, cache, pos):
     return x + h + f, new_cache
 
 
-def hybrid_decode_step(params, cfg: ArchConfig, tokens, pos, cache):
+def hybrid_decode_step(params, cfg: ArchConfig, tokens, pos, cache,
+                       update_mask=None):
+    """One-token decode.  ``update_mask`` ([B] bool, optional) gates the
+    recurrent-state write-back per batch row (see ssm.mamba2_decode); the
+    positional attention caches need no mask — a non-updated row's k/v write
+    lands at a position its owner has not attended past and is overwritten
+    by the owner's next real decode (the transient-row invariant that
+    token-wise prefill of KV caches relies on)."""
     x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
     x0 = x
     every = cfg.hybrid_attn_every
@@ -143,7 +149,8 @@ def hybrid_decode_step(params, cfg: ArchConfig, tokens, pos, cache):
         layer = jax.tree.map(lambda t: t[i], params["mamba_layers"])
         mcache = jax.tree.map(lambda t: t[i], cache["mamba"])
         h = cm.rms_norm(layer["norm"], x, cfg.norm_eps)
-        d, nm = ssm_mod.mamba2_decode(layer["block"], h, cfg, mcache)
+        d, nm = ssm_mod.mamba2_decode(layer["block"], h, cfg, mcache,
+                                      update_mask=update_mask)
         x = x + d
         new_mamba.append(nm)
         if (i + 1) % every == 0 and (i + 1) // every <= n_pts:
@@ -157,6 +164,54 @@ def hybrid_decode_step(params, cfg: ArchConfig, tokens, pos, cache):
     new_cache = {
         "mamba": jax.tree.map(lambda *ts: jnp.stack(ts), *new_mamba),
         "attn": attn_cache,
-        "x0": x0,
     }
     return logits, new_cache
+
+
+def _shared_block_prefill(shared, x, x0, cfg: ArchConfig, *,
+                          positions, mask, max_len):
+    h = cm.linear(shared["in_proj"],
+                  jnp.concatenate([x, x0], axis=-1), cfg.quant)
+    a, kv = attn.attn_prefill(shared["attn"],
+                              cm.rms_norm(shared["ln1"], h, cfg.norm_eps),
+                              cfg, max_len=max_len, positions=positions,
+                              mask=mask)
+    h = h + a
+    f = ffn_mod.ffn_forward(shared["ffn"],
+                            cm.rms_norm(shared["ln2"], h, cfg.norm_eps), cfg)
+    return x + h + f, kv
+
+
+def hybrid_prefill(params, cfg: ArchConfig, tokens, *, max_len: int):
+    """Bulk prefill: one full-sequence pass -> (logits [B, S, V], cache).
+
+    The cache matches ``hybrid_cache_specs(cfg, B, max_len)`` with the SSM
+    state after token S-1 and each attention point's KV rows 0..S-1 —
+    semantically identical to S token-wise decode steps, in one pass
+    (unrolled over layers like hybrid_decode_step; n_layers is static)."""
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    x0 = x
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mask = cm.causal_mask(S, cfg.sliding_window)
+    every = cfg.hybrid_attn_every
+    n_pts = n_attn_points(cfg)
+    mamba_caches, attn_caches = [], []
+    for i in range(cfg.n_layers):
+        layer = jax.tree.map(lambda t: t[i], params["mamba_layers"])
+        h = cm.rms_norm(layer["norm"], x, cfg.norm_eps)
+        d, mc = ssm_mod.mamba2_prefill(layer["block"], h, cfg)
+        x = x + d
+        mamba_caches.append(mc)
+        if (i + 1) % every == 0 and (i + 1) // every <= n_pts:
+            x, ac = _shared_block_prefill(params["shared"], x, x0, cfg,
+                                          positions=positions, mask=mask,
+                                          max_len=max_len)
+            attn_caches.append(ac)
+    x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = cm.unembed(params["embed"], x)
+    cache = {
+        "mamba": jax.tree.map(lambda *ts: jnp.stack(ts), *mamba_caches),
+        "attn": jax.tree.map(lambda *ts: jnp.stack(ts), *attn_caches),
+    }
+    return logits, cache

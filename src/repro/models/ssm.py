@@ -75,12 +75,14 @@ def _segsum(x: jax.Array) -> jax.Array:
     return jnp.where(mask, d, -jnp.inf)
 
 
-def ssd_chunked(xh, dt, A, Bm, Cm, D, chunk: int):
+def ssd_chunked(xh, dt, A, Bm, Cm, D, chunk: int, *, return_state: bool = False):
     """Chunked SSD scan (Mamba2 Listing 1, jnp).
 
     xh: [b, l, h, p]  dt: [b, l, h]  A: [h] (negative)
     Bm, Cm: [b, l, g, n] (g groups broadcast over heads)  D: [h]
-    returns y: [b, l, h, p]
+    returns y: [b, l, h, p]; with ``return_state`` also the recurrent state
+    *after* the last token ([b, h, p, n] fp32 — the decode ``ssm_state``),
+    which is what bulk prefill scatters into the serving cache.
 
     Heads are factored as h = g x e and B/C keep their group dim throughout —
     materializing the head-broadcast ([..., h, n] via jnp.repeat) cost
@@ -121,7 +123,7 @@ def ssd_chunked(xh, dt, A, Bm, Cm, D, chunk: int):
         return new, carry                                  # state BEFORE chunk
 
     init = jnp.zeros((b, g, e, p, states.shape[-1]), jnp.float32)
-    _, prev_states = jax.lax.scan(
+    final_state, prev_states = jax.lax.scan(
         scan_fn, init,
         (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
     )
@@ -131,34 +133,67 @@ def ssd_chunked(xh, dt, A, Bm, Cm, D, chunk: int):
     Y_off = jnp.einsum("bclgn,bcgepn,bclge->bclgep", Cc, prev_states,
                        state_decay)
     y = (Y_diag + Y_off).reshape(b, l, h, p)
-    return y + xf * D[None, None, :, None]
+    y = y + xf * D[None, None, :, None]
+    if return_state:
+        return y, final_state.reshape(b, h, p, states.shape[-1])
+    return y
 
 
 def cfg_state_n(states: jax.Array) -> int:
     return states.shape[-1]
 
 
-def mamba2_forward(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
-    """Full-sequence Mamba2 block. x: [B, L, D] -> [B, L, D]."""
+def _mamba2_seq(params, x: jax.Array, cfg: ArchConfig, *, want_cache: bool):
+    """Shared full-sequence core for forward (train) and prefill (serve)."""
     B, L, _ = x.shape
     d_inner, H, _ = _dims(cfg)
     n, g = cfg.ssm_state, cfg.ssm_ngroups
     proj = cm.linear(params["in_proj"], x, cfg.quant)
     z, xh, Bm, Cm, dt_raw = _split_proj(cfg, proj)
-    xBC = _causal_dconv(
-        jnp.concatenate([xh, Bm, Cm], axis=-1), params["conv_w"], params["conv_b"])
+    xBC_pre = jnp.concatenate([xh, Bm, Cm], axis=-1)         # pre-conv stream
+    xBC = _causal_dconv(xBC_pre, params["conv_w"], params["conv_b"])
     xh = xBC[..., :d_inner].reshape(B, L, H, cfg.ssm_head_dim)
     Bm = xBC[..., d_inner: d_inner + g * n].reshape(B, L, g, n)
     Cm = xBC[..., d_inner + g * n:].reshape(B, L, g, n)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
     A = -jnp.exp(params["A_log"])
+    # largest divisor of L that fits the configured chunk — arbitrary prompt
+    # lengths must work (the bulk-prefill path sees prompt_len-1, not a
+    # training shape); worst case (prime L) degrades to chunk=1, still exact
     chunk = min(cfg.ssm_chunk, L)
-    if L % chunk:
-        chunk = 1 if L < cfg.ssm_chunk else cfg.ssm_chunk
-    y = ssd_chunked(xh, dt, A, Bm, Cm, params["D"], chunk)   # [B, L, H, p] f32
+    while L % chunk:
+        chunk -= 1
+    y = ssd_chunked(xh, dt, A, Bm, Cm, params["D"], chunk,
+                    return_state=want_cache)                 # [B, L, H, p] f32
+    cache = None
+    if want_cache:
+        y, final_state = y
+        # conv_state holds the last (width-1) *pre-activation* xBC rows —
+        # exactly what token-wise decode keeps (zero-padded when L < width-1)
+        w1 = cfg.ssm_conv_width - 1
+        conv_state = jnp.pad(xBC_pre, ((0, 0), (w1, 0), (0, 0)))[:, L:]
+        cache = {"ssm_state": final_state,
+                 "conv_state": conv_state.astype(cfg.jnp_dtype)}
     y = y.reshape(B, L, d_inner)
     y = cm.rms_norm_gated(params["norm"], y.astype(x.dtype), z, cfg.norm_eps)
-    return cm.linear(params["out_proj"], y, cfg.quant)
+    out = cm.linear(params["out_proj"], y, cfg.quant)
+    return out, cache
+
+
+def mamba2_forward(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence Mamba2 block. x: [B, L, D] -> [B, L, D]."""
+    out, _ = _mamba2_seq(params, x, cfg, want_cache=False)
+    return out
+
+
+def mamba2_prefill(params, x: jax.Array, cfg: ArchConfig):
+    """Full-sequence Mamba2 block that also returns the decode cache.
+
+    x: [B, L, D] -> (y [B, L, D], cache as in :func:`mamba2_cache_specs`),
+    with the cache holding the recurrent state *after* token L-1 — the bulk
+    prefill path: one chunked-SSD pass instead of L decode steps.
+    """
+    return _mamba2_seq(params, x, cfg, want_cache=True)
 
 
 # --- decode -----------------------------------------------------------------
@@ -178,8 +213,18 @@ def init_mamba2_cache(cfg: ArchConfig, batch: int):
                         mamba2_cache_specs(cfg, batch))
 
 
-def mamba2_decode(params, x: jax.Array, cfg: ArchConfig, cache):
-    """One-token recurrent update. x: [B, 1, D] -> (y [B, 1, D], cache)."""
+def mamba2_decode(params, x: jax.Array, cfg: ArchConfig, cache,
+                  update_mask: jax.Array | None = None):
+    """One-token recurrent update. x: [B, 1, D] -> (y [B, 1, D], cache).
+
+    ``update_mask`` ([B] bool, optional) gates the *state write-back* per
+    batch row: rows where it is False keep their ssm/conv state bit-exact
+    (their returned y is garbage and must be ignored by the caller).  This
+    is what lets a serving engine run a grouped decode (§IV-D: slots grouped
+    by per-request ``m_active``) over a shared batch without pad tokens
+    advancing — i.e. corrupting — the recurrent state of slots outside the
+    running group.  ``None`` means update every row (train/single-group).
+    """
     B = x.shape[0]
     d_inner, H, conv_ch = _dims(cfg)
     n, g = cfg.ssm_state, cfg.ssm_ngroups
@@ -206,8 +251,13 @@ def mamba2_decode(params, x: jax.Array, cfg: ArchConfig, cache):
     y = y.reshape(B, d_inner).astype(x.dtype)
     y = cm.rms_norm_gated(params["norm"], y, z, cfg.norm_eps)
     out = cm.linear(params["out_proj"], y, cfg.quant)[:, None, :]
+    new_conv = window[:, 1:].astype(cache["conv_state"].dtype)
+    if update_mask is not None:
+        keep = update_mask.astype(bool)
+        state = jnp.where(keep[:, None, None, None], state, cache["ssm_state"])
+        new_conv = jnp.where(keep[:, None, None], new_conv, cache["conv_state"])
     new_cache = {
         "ssm_state": state,
-        "conv_state": window[:, 1:].astype(cache["conv_state"].dtype),
+        "conv_state": new_conv,
     }
     return out, new_cache

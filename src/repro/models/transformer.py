@@ -71,6 +71,24 @@ def layer_decode(params, x, cfg: ArchConfig, cache, pos):
     return x + f, cache
 
 
+def layer_prefill(params, x, cfg: ArchConfig, *, positions, mask, max_len):
+    """Full-sequence layer pass that also emits the layer's decode cache."""
+    h = cm.rms_norm(params["ln1"], x, cfg.norm_eps)
+    if cfg.use_mla:
+        a, kv = attn.mla_prefill(params["attn"], h, cfg, max_len=max_len,
+                                 positions=positions, mask=mask)
+    else:
+        a, kv = attn.attn_prefill(params["attn"], h, cfg, max_len=max_len,
+                                  positions=positions, mask=mask)
+    x = x + a
+    h = cm.rms_norm(params["ln2"], x, cfg.norm_eps)
+    if "moe" in params:
+        f, _ = moe_mod.moe_ffn(params["moe"], h, cfg)
+    else:
+        f = ffn_mod.ffn_forward(params["ffn"], h, cfg)
+    return x + f, kv
+
+
 # ---------------------------------------------------------------------------
 # Full LM
 # ---------------------------------------------------------------------------
@@ -214,6 +232,47 @@ def _decode_stack(stacked, caches, x, cfg: ArchConfig, pos):
         new_caches.append(nc)
     stacked_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches)
     return x, stacked_cache
+
+
+def _prefill_stack(stacked, x, cfg: ArchConfig, positions, mask, max_len):
+    """Run a homogeneous layer stack over the full sequence, collecting each
+    layer's decode cache (stacked [L, ...], same layout as lm_cache_specs)."""
+    def body(carry, layer_params):
+        return layer_prefill(layer_params, carry, cfg, positions=positions,
+                             mask=mask, max_len=max_len)
+
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, stacked)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    caches = []
+    for i in range(n):
+        layer = jax.tree.map(lambda t: t[i], stacked)
+        x, kv = body(x, layer)
+        caches.append(kv)
+    return x, jax.tree.map(lambda *ts: jnp.stack(ts), *caches)
+
+
+def lm_prefill(params, cfg: ArchConfig, tokens, *, max_len: int):
+    """Bulk prefill: one full-sequence pass -> (logits [B, S, V], cache).
+
+    The cache matches ``lm_cache_specs(cfg, B, max_len)`` with positions
+    0..S-1 populated — semantically identical to S token-wise
+    ``lm_decode_step`` calls, in a single forward pass (the serving
+    engine's admission path; see launch/serve.py).
+    """
+    x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mask = cm.causal_mask(S, cfg.sliding_window)
+    cache = {}
+    if "dense_layers" in params:
+        x, nc = _prefill_stack(params["dense_layers"], x, cfg, positions,
+                               mask, max_len)
+        cache["dense_layers"] = nc
+    x, nc = _prefill_stack(params["layers"], x, cfg, positions, mask, max_len)
+    cache["layers"] = nc
+    x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, cfg, x), cache
 
 
 def lm_decode_step(params, cfg: ArchConfig, tokens, pos, cache):

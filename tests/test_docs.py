@@ -1,0 +1,30 @@
+"""Docs stay runnable: execute every fenced ```python block in README.md
+and docs/*.md (the CI docs job runs the same checker stand-alone)."""
+import importlib.util
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", ROOT / "tools" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+SNIPPETS = list(check_docs.iter_snippets(ROOT))
+
+
+def test_docs_exist_with_snippets():
+    assert (ROOT / "README.md").exists()
+    assert (ROOT / "docs" / "serving.md").exists()
+    assert SNIPPETS, "no executable python snippets found in the docs"
+
+
+@pytest.mark.parametrize(
+    "path,lineno,code",
+    SNIPPETS,
+    ids=[f"{p.name}:{ln}" for p, ln, _ in SNIPPETS],
+)
+def test_snippet_runs(path, lineno, code):
+    check_docs.run_snippet(path, lineno, code)

@@ -202,23 +202,42 @@ class TestServer:
                                    rtol=1e-5, atol=1e-5)
         assert set(srv._decode_fns) == {None, 1}
 
-    def test_mixed_m_active_rejected_for_recurrent_families(self):
-        """SSM/conv state advances for every batch row each decode, so mixed
-        per-request level counts would corrupt non-group slots' state —
-        admit() must refuse rather than serve wrong tokens."""
+    def test_mixed_m_active_accepted_for_recurrent_families(self):
+        """Per-slot update masks keep non-group slots' SSM/conv state
+        bit-exact under grouped decode, so mixed per-request level counts
+        now serve for ssm/hybrid too (the PR-1 admit-time rejection is
+        gone; correctness is covered by test_serve_prefill.py)."""
         cfg = cb.reduced(cb.get_config("mamba2_2_7b")).replace(dtype="float32")
         qc = QuantConfig(mode="binary", M=2, K_iters=2)
         params = api.init_params(cfg, jax.random.PRNGKey(0))
         bp = api.binarize_model_params(cfg, params, qc=qc)
         srv = Server(cfg.replace(quant=qc), bp, max_batch=2, max_len=16)
-        assert srv.admit(Request(prompt=np.array([1, 2], np.int32),
-                                 max_new_tokens=1))
-        with pytest.raises(ValueError, match="recurrent state"):
+        r_full = Request(prompt=np.array([1, 2], np.int32), max_new_tokens=1)
+        r_fast = Request(prompt=np.array([1, 2], np.int32), max_new_tokens=1,
+                         m_active=1)
+        assert srv.admit(r_full)
+        assert srv.admit(r_fast)
+        srv.run_until_done()
+        assert len(r_full.out_tokens) == 1 and len(r_fast.out_tokens) == 1
+        # the level switch stays observable inside the mixed batch
+        assert not np.allclose(r_fast.last_logits, r_full.last_logits)
+
+    def test_admit_validates_m_active_and_prompt(self):
+        """m_active=0 used to be silently clamped by the kernel path —
+        admission must surface a clear error instead (m_active > M stays a
+        documented serve-full-accuracy clamp)."""
+        cfg = _tiny_cfg()
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(cfg, params, max_batch=2, max_len=16)
+        with pytest.raises(ValueError, match="m_active"):
+            srv.admit(Request(prompt=np.array([1, 2], np.int32), m_active=0))
+        with pytest.raises(ValueError, match="m_active"):
+            srv.admit(Request(prompt=np.array([1, 2], np.int32), m_active=-3))
+        with pytest.raises(ValueError, match="at least one token"):
+            srv.admit(Request(prompt=np.array([], np.int32)))
+        with pytest.raises(ValueError, match="max_len"):
             srv.admit(Request(prompt=np.array([1, 2], np.int32),
-                              max_new_tokens=1, m_active=1))
-        # same level count is fine
-        assert srv.admit(Request(prompt=np.array([1, 2], np.int32),
-                                 max_new_tokens=1, m_active=2))
+                              max_new_tokens=64))
 
     def test_decode_matches_forward(self):
         """Step-wise decode with cache reproduces teacher-forced logits."""

@@ -1,0 +1,63 @@
+"""Keep the docs runnable: execute fenced ``python`` blocks in README.md
+and docs/*.md.
+
+    python tools/check_docs.py [repo_root]
+
+Every block fenced as ```` ```python ```` is executed in a fresh namespace
+with ``src/`` on sys.path (the fast-tier environment — CPU, no TPU).  Blocks
+that are illustrative API sketches rather than runnable programs should be
+fenced as ```` ```python no-exec ```` (the first info-string word keeps
+markdown highlighting working).  CI runs this as the docs job; the pytest
+wrapper is tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+
+def iter_snippets(root: pathlib.Path):
+    """Yield (path, first_line_no, code) for every executable python block."""
+    docs = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    for path in docs:
+        if not path.exists():
+            continue
+        in_block, info, buf, start = False, "", [], 0
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            stripped = line.strip()
+            if not in_block and stripped.startswith("```"):
+                in_block, info, buf, start = True, stripped[3:].strip(), [], lineno + 1
+            elif in_block and stripped == "```":
+                in_block = False
+                words = info.split()
+                if words[:1] == ["python"] and "no-exec" not in words:
+                    yield path, start, "\n".join(buf)
+            elif in_block:
+                buf.append(line)
+
+
+def run_snippet(path: pathlib.Path, lineno: int, code: str) -> None:
+    ns = {"__name__": "__docsnippet__"}
+    exec(compile(code, f"{path}:{lineno}", "exec"), ns)  # noqa: S102
+
+
+def main(root: str | None = None) -> int:
+    rootp = pathlib.Path(root or ".").resolve()
+    src = str(rootp / "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    count = 0
+    for path, lineno, code in iter_snippets(rootp):
+        rel = path.relative_to(rootp)
+        print(f"[check_docs] exec {rel}:{lineno}", flush=True)
+        run_snippet(path, lineno, code)
+        count += 1
+    if count == 0:
+        print("[check_docs] ERROR: no executable python snippets found")
+        return 1
+    print(f"[check_docs] {count} snippet(s) executed OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else None))

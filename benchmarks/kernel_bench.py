@@ -41,26 +41,36 @@ def tile_stats(bt, bn, bk, M):
     return vmem, ai_packed, ai_dense
 
 
-def conv_tile_stats(H, W, C, kh, kw, D, M, *, stride=1, pool=1, bd=128):
-    """Analytic HBM bytes moved per (image, D-tile) kernel program:
+def conv_tile_stats(H, W, C, kh, kw, D, M, *, stride=1, pool=1, bd=128,
+                    bu=None):
+    """Analytic HBM bytes moved per (image, D-tile, row-tile) kernel program:
     fused implicit GEMM vs the explicit-im2col path, fp32 activations.
 
-    fused (kernels/binary_conv.py): read the input block + the bit-packed
-    per-tap weight tile, write the *pooled* output tile.  The patch tensor
-    lives only in VMEM.
+    fused (kernels/binary_conv.py): read the input row-slab (halo rows
+    included) + the bit-packed per-tap weight tile, write the *pooled*
+    output tile.  The patch tensor lives only in VMEM.  ``bu`` is the row
+    tile in pooled output rows; None = whole-image blocking (the BU = Uo
+    special case).
 
     im2col (core/binconv.py conv2d + relu_maxpool): additionally writes the
-    [U·V, kh·kw·C] patch tile to HBM and reads it back for the matmul, then
-    writes the unpooled conv output and re-reads it for pooling.
+    row-tile's [u·V, kh·kw·C] patch slice to HBM and reads it back for the
+    matmul, then writes the unpooled conv output and re-reads it for
+    pooling.
     """
+    from repro.kernels import binary_conv as bck
+
     U = (H - kh) // stride + 1
     V = (W - kw) // stride + 1
     bd = min(bd, D)
-    x_b = H * W * C * 4
+    uo = max(U // pool, 1)
+    bu = uo if bu is None else min(bu, uo)
+    u_tile = bu * pool
+    slab = bck.slab_rows(bu, kh, stride=stride, pool=pool)
+    x_b = min(slab, H) * W * C * 4
     w_packed = M * kh * kw * ((C + 7) // 8) * bd
-    out_pooled = (U // pool) * (V // pool) * bd * 4
-    out_unpooled = U * V * bd * 4
-    patches = U * V * kh * kw * C * 4
+    out_pooled = bu * (V // pool) * bd * 4
+    out_unpooled = u_tile * V * bd * 4
+    patches = u_tile * V * kh * kw * C * 4
     fused = x_b + w_packed + out_pooled
     im2col_path = (x_b + 2 * patches + w_packed
                    + out_unpooled * 2 + out_pooled)
@@ -105,6 +115,75 @@ def conv_rows(quick: bool = False):
     return rows
 
 
+# MobileNet-B2 (alpha=1, rho=1, 224² — the paper's Table III headline row).
+# H/W are the SAME-padded input dims of each layer; stem + the early
+# point-wise layers are exactly where whole-image blocking blows the VMEM
+# budget and the row tiling (kernels/binary_conv.py pick_bu) must engage.
+MOBILENET_B2_CASES = [
+    ("stem_224", dict(H=225, W=225, C=3, kh=3, kw=3, D=32, M=2, stride=2)),
+    ("pw0_112", dict(H=112, W=112, C=32, kh=1, kw=1, D=64, M=2)),
+    ("pw1_56", dict(H=56, W=56, C=64, kh=1, kw=1, D=128, M=2)),
+    ("pw3_28", dict(H=28, W=28, C=128, kh=1, kw=1, D=256, M=2)),
+    ("pw5_14", dict(H=14, W=14, C=256, kh=1, kw=1, D=512, M=2)),
+    ("pw11_7", dict(H=7, W=7, C=512, kh=1, kw=1, D=1024, M=2)),
+]
+
+# depth-wise layers (binary_dwconv.py): SAME-padded dims, channel-wise
+MOBILENET_B2_DW_CASES = [
+    ("dw0_112", dict(H=114, W=114, C=32, stride=1)),
+    ("dw1_112s2", dict(H=113, W=113, C=64, stride=2)),
+    ("dw5_28s2", dict(H=29, W=29, C=256, stride=2)),
+]
+
+
+def mobilenet_b2_rows():
+    """MobileNet-B2 (224²) tier: per-tile VMEM working set for whole-image
+    vs picked row-tile blocking, plus fused-vs-im2col HBM bytes under the
+    tiled blocking — the quantities behind the §V Table III scaling claim."""
+    from repro.kernels import binary_conv as bck
+    from repro.kernels import binary_dwconv as bdw
+
+    budget = bck.DEFAULT_VMEM_BUDGET
+    rows = []
+    for name, case in MOBILENET_B2_CASES:
+        H, W, C = case["H"], case["W"], case["C"]
+        kh, kw, D, M = case["kh"], case["kw"], case["D"], case["M"]
+        stride = case.get("stride", 1)
+        bd = min(128, D)
+        U = (H - kh) // stride + 1
+        whole = bck.tile_vmem_bytes(W, C, kh, kw, bd, bu=U, stride=stride,
+                                    m=M)
+        bu = bck.pick_bu(H, W, C, kh, kw, bd, 1, budget, stride=stride, m=M)
+        tiled = bck.tile_vmem_bytes(W, C, kh, kw, bd, bu=bu, stride=stride,
+                                    m=M)
+        fused, im2col_b, gain = conv_tile_stats(bd=bd, bu=bu, **case)
+        rows.append((
+            f"conv_vmem_per_tile_mnet_b2_{name}", 0.0,
+            f"bu={bu}/{U} vmem_whole_MB={whole / 2**20:.2f} "
+            f"vmem_tiled_MB={tiled / 2**20:.2f} "
+            f"budget_MB={budget / 2**20:.0f} "
+            f"fused_KB={fused / 1024:.1f} im2col_KB={im2col_b / 1024:.1f} "
+            f"hbm_reduction={gain:.1f}x"))
+    for name, case in MOBILENET_B2_DW_CASES:
+        H, W, C, stride = case["H"], case["W"], case["C"], case["stride"]
+        M = 2
+        U = (H - 3) // stride + 1
+        whole = bdw.tile_vmem_bytes_dw(W, C, 3, 3, bu=U, stride=stride, m=M)
+        bu = bdw.pick_bu_dw(H, W, C, 3, 3, budget, stride=stride, m=M)
+        tiled = bdw.tile_vmem_bytes_dw(W, C, 3, 3, bu=bu, stride=stride, m=M)
+        c8 = -(-C // 8)
+        # binary vs fp32 dw weight stream per image (the dw memory-bound win)
+        w_bits = M * 9 * c8 + M * C * 4
+        w_fp = 9 * C * 4
+        rows.append((
+            f"dwconv_vmem_per_tile_mnet_b2_{name}", 0.0,
+            f"bu={bu}/{U} vmem_whole_MB={whole / 2**20:.2f} "
+            f"vmem_tiled_MB={tiled / 2**20:.2f} "
+            f"budget_MB={budget / 2**20:.0f} "
+            f"w_packed_B={w_bits} w_fp32_B={w_fp}"))
+    return rows
+
+
 def run(quick: bool = False):
     rows = []
     T, K, N, M = (64, 256, 128, 2) if quick else (128, 512, 256, 2)
@@ -134,6 +213,7 @@ def run(quick: bool = False):
             f"vmem_KB={vmem / 1024:.0f} AI_packed={ai_p:.0f} "
             f"AI_bf16={ai_d:.0f} gain={ai_p / ai_d:.1f}x"))
     rows.extend(conv_rows(quick))
+    rows.extend(mobilenet_b2_rows())
     return rows
 
 

@@ -24,6 +24,8 @@ both paths apply at runtime — the serving-time accuracy↔throughput switch.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
@@ -132,6 +134,56 @@ def binarize_conv_params(params: dict, quant: QuantConfig) -> dict:
     return out
 
 
+def binarize_dwconv_params(params: dict, quant: QuantConfig) -> dict:
+    """Offline: fp depth-wise filters -> packed binary form (channel-wise).
+
+    params['w']: [kh, kw, 1, C] (HWIO depth-wise layout).  The paper (§V-A3)
+    approximates depth-wise layers channel-wise with D_arch = 1: each channel
+    is one "filter" of kh·kw taps, so the approximation runs on the
+    [kh*kw, C] matrix with per-channel alpha.  Emits the channel-packed
+    ``B_tap_packed [M, kh*kw, ceil(C/8)]`` layout the fused dw kernel
+    consumes (kernels/binary_dwconv.py) plus ``alpha [M, C]``.
+    """
+    kh, kw, one, C = params["w"].shape
+    assert one == 1, f"expected HWIO depth-wise filters [kh,kw,1,C], got {params['w'].shape}"
+    W = params["w"].reshape(kh * kw, C).astype(jnp.float32)
+    approx, _ = bz.approximate_tensor(
+        W, quant.M, algorithm=quant.algorithm, K_iters=quant.K_iters,
+        group_size=None)  # per-column == per-channel (G = 1)
+    from repro.kernels import binary_dwconv as bdw
+
+    out = {"B_tap_packed": bdw.pack_dw_taps(approx.B),
+           "alpha": approx.alpha[:, 0, :],     # [M, 1, C] -> [M, C]
+           "kh": kh, "kw": kw}
+    if "b" in params:
+        out["b"] = params["b"]
+    return out
+
+
+_warned_legacy_repack = False
+
+
+def ensure_tap_packed(params: dict, C: int) -> dict:
+    """One-time weight-layout upgrade for legacy packed conv trees.
+
+    Packed trees that predate the fused kernel carry only the flat
+    ``B_packed`` stream; the fused kernel consumes the per-tap
+    ``B_tap_packed`` layout.  Call this once at load time (``C`` is the
+    layer's input channel count — it cannot be recovered from the packed
+    bytes alone because each tap pads to a byte boundary); hitting the
+    conversion inside a traced forward instead re-runs the repack every
+    call and warns once (see :func:`conv2d_relu_pool`).
+    """
+    if "B_tap_packed" in params or "B_packed" not in params:
+        return params
+    from repro.kernels import binary_conv as bck
+
+    out = dict(params)
+    out["B_tap_packed"] = bck.repack_taps(
+        params["B_packed"], params["kh"], params["kw"], C)
+    return out
+
+
 def relu_maxpool(x: jax.Array, pool: int) -> jax.Array:
     """AMU: max-pool (downsampling only, paper §III-B) then ReLU == fused."""
     B, H, W, C = x.shape
@@ -167,6 +219,16 @@ def conv2d_relu_pool(params: dict, x: jax.Array, *, stride: int = 1,
         if U % pool == 0 and V % pool == 0:
             tap = params.get("B_tap_packed")
             if tap is None:  # packed trees from before the fused kernel landed
+                global _warned_legacy_repack
+                if not _warned_legacy_repack:
+                    _warned_legacy_repack = True
+                    warnings.warn(
+                        "conv params carry only the flat B_packed layout; "
+                        "repack_taps is re-running inside the traced forward "
+                        "on every call.  Convert the tree once at load time "
+                        "with binconv.ensure_tap_packed(params, C) "
+                        "(binarize_conv_params emits B_tap_packed directly).",
+                        RuntimeWarning, stacklevel=2)
                 from repro.kernels import binary_conv as bck
 
                 tap = bck.repack_taps(params["B_packed"], kh, kw, C)
@@ -183,3 +245,67 @@ def conv2d_relu_pool(params: dict, x: jax.Array, *, stride: int = 1,
             return y.astype(x.dtype)
     y = conv2d(params, x, stride=stride, padding=padding, quant=quant)
     return relu_maxpool(y, pool)
+
+
+def _dwconv_fp(w: jax.Array, x: jax.Array, stride: int) -> jax.Array:
+    """fp depth-wise conv, SAME padding.  w: [kh, kw, 1, C] (HWIO groups)."""
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1])
+
+
+def depthwise_relu(params: dict, x: jax.Array, *, stride: int = 1,
+                   quant: QuantConfig = DENSE) -> jax.Array:
+    """Depth-wise conv + bias + ReLU — the paper's §V-A3 channel-wise stage.
+
+    Path selection mirrors :func:`conv2d_relu_pool`:
+
+      * packed-binary params ('B_tap_packed' [M, kh*kw, ceil(C/8)]) with
+        ``quant.fuse_conv`` + ``quant.use_pallas``: the fused Pallas kernel
+        (kernels/binary_dwconv.py) — the activations make one HBM round
+        trip, the weights stream bit-packed, and **no fp ``lax.conv``
+        runs** (the full-binary MobileNet requirement);
+      * packed-binary params otherwise: the jnp oracle
+        (kernels/ref.py binary_dwconv_relu_ref) — numerically the same
+        reconstruction, HBM-bound;
+      * fp params in ``fake_quant`` mode: STE-binarized W_hat (channel-wise,
+        group_size = whole filter) through fp conv — the retraining path
+        the packed deployment must match;
+      * fp params otherwise: plain dense conv (the fp baseline).
+
+    Depth-wise layers always use SAME padding (MobileNet's only variant).
+    """
+    if "B_tap_packed" in params:
+        kh, kw = params["kh"], params["kw"]
+        C = x.shape[-1]
+        bias = params.get("b")
+        if bias is None:
+            bias = jnp.zeros((C,), jnp.float32)
+        if quant.fuse_conv and quant.use_pallas:
+            from repro.kernels import ops as kops
+
+            y = kops.binary_dwconv2d(
+                x, params["B_tap_packed"], params["alpha"], bias,
+                kh=kh, kw=kw, stride=stride, padding="SAME",
+                m_active=quant.m_active, interpret=quant.interpret)
+        else:
+            from repro.kernels import ref as kref
+
+            y = kref.binary_dwconv_relu_ref(
+                x, params["B_tap_packed"], params["alpha"], kh=kh, kw=kw,
+                stride=stride, padding="SAME", m_active=quant.m_active,
+                bias=bias)
+        return y.astype(x.dtype)
+    w = params["w"]
+    if quant.mode == "fake_quant":
+        kh, kw, one, C = w.shape
+        W_hat = bz.fake_quant(
+            w.reshape(kh * kw, C).astype(jnp.float32), quant.M,
+            algorithm=quant.algorithm, K_iters=quant.K_iters,
+            group_size=None)  # channel-wise, like binarize_dwconv_params
+        w = W_hat.reshape(kh, kw, one, C).astype(x.dtype)
+    y = _dwconv_fp(w, x, stride)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return jax.nn.relu(y)

@@ -6,9 +6,9 @@ matmul ever runs, forfeiting the memory-stream win the paper's compression
 (Eq. 6) buys.  On the FPGA the AGU streams patches out of the feature buffer;
 here the kernel does the same job in VMEM:
 
-  1. AGU:  extract the patch tile for one image directly from the input block
-     with kh·kw static strided slices — the im2col tensor only ever exists as
-     a VMEM value, never in HBM.
+  1. AGU:  extract the patch tile for one input row-slab directly from the
+     input block with kh·kw static strided slices — the im2col tensor only
+     ever exists as a VMEM value, never in HBM.
   2. PE/PA: per level m, unpack the bit-packed filters to ±1, fold the
      per-(level, group) alpha in per K row, and run one MXU matmul
      (the same per-level compute order as binary_matmul.py).
@@ -33,27 +33,54 @@ padded to its own byte boundary with +1 bits; the kernel slices the padded
 channels off right after unpacking (``w[:, :C, :]``), so their value never
 matters.  Overhead: at most 7 bits per (level, tap, filter).
 ``pack_taps`` builds the layout from ±1 tensors, ``repack_taps`` converts a
-flat ``B_packed``, and ``binconv.binarize_conv_params`` emits it directly —
-the tests' jnp oracle (kernels/ref.py) consumes the *flat* layout, which is
-what keeps the two packings cross-checked.
+flat ``B_packed`` (one-time upgrade — see ``binconv.ensure_tap_packed``),
+and ``binconv.binarize_conv_params`` emits it directly — the tests' jnp
+oracle (kernels/ref.py) consumes the *flat* layout, which is what keeps the
+two packings cross-checked.
 
-VMEM blocking
--------------
-Grid: (B, D/BD) — one program per (image, output-channel tile).  The spatial
-extent of one image lives in VMEM whole; D is tiled MXU-style (BD = 128 by
-default, shrunk for small D).  alpha/bias/weights are broadcast along the
-batch grid dim, x along the D grid dim.  Per-program working set:
+VMEM blocking: (batch, D-tile, U row-tile) grid with halo slabs
+---------------------------------------------------------------
+Grid: ``(B, D/BD, ceil(Uo/BU))`` where ``Uo = U // pool`` is the pooled
+output height.  One program computes a ``BU × Vo × BD`` pooled output tile
+(``Vo = V // pool``; the V axis is never tiled — feature maps are at most a
+few hundred columns wide, and the MXU wants the full ``u_tile·V`` row
+dimension anyway).  D is tiled MXU-style (BD = 128 by default, shrunk for
+small D).
 
-    x tile        Hp·Wp·C·4          (padded input image, fp32)
-    patches       U·V·kh·kw·C·4      (implicit im2col, VMEM-only value)
-    weight tile   M·kh·kw·ceil(C/8)·BD   (bit-packed)
-    acc/out       U·V·BD·4           (epilogue shrinks the HBM write pool²)
+The input block for row-tile ``t`` is a **slab** of
 
-Whole-image blocking bounds this by the feature-map size, which fits the
-paper's CNN-A/MobileNet-scale layers; row-tiling the U axis for large
-feature maps is a ROADMAP item.  ``benchmarks/kernel_bench.py
-conv_tile_stats`` prints the analytic HBM bytes per tile for the fused vs
-explicit-im2col paths from the same quantities.
+    slab_rows = (BU·pool − 1)·stride + kh            rows, starting at
+    row0      = t · BU·pool·stride                   (element offset)
+
+so consecutive slabs overlap by the ``kh − stride`` halo rows the conv
+window needs across the tile boundary.  Overlapping blocks cannot be
+expressed in Pallas' default *Blocked* indexing (offsets are
+``index·block_shape``), so the x spec uses ``pl.Unblocked`` indexing: the
+index map returns element offsets directly, and the halo rows ride in via
+``t·adv`` with ``adv = BU·pool·stride < slab_rows``.  The wrapper zero-pads
+the row axis so every slab (including the ragged last tile when
+``Uo % BU != 0``) is fully in bounds; the zero rows only ever feed output
+rows that are sliced off after the call.
+
+alpha/bias/weights are broadcast along the batch and row-tile grid dims,
+x along the D grid dim; the row-tile dim is innermost so a weight tile
+stays resident while the x slabs stream through it.  Per-program working
+set (``tile_vmem_bytes`` computes the same quantities):
+
+    x slab        slab_rows·Wp·C·4              (fp32 input rows + halo)
+    patches       BU·pool·V·kh·kw·C·4           (implicit im2col, VMEM-only)
+    weight tile   M·kh·kw·ceil(C/8)·BD          (bit-packed)
+    w (1 level)   kh·kw·ceil(C/8)·8·BD·4        (unpacked ±1 as fp32)
+    acc           BU·pool·V·BD·4
+    out tile      BU·Vo·BD·4                    (pooled HBM write)
+
+``pick_bu`` chooses the largest BU whose working set fits a VMEM budget
+(default ``DEFAULT_VMEM_BUDGET`` = 8 MiB, half a TPU core's VMEM, leaving
+room for double buffering); whole-image blocking is recovered as the
+``BU == Uo`` special case and remains the pick whenever the image fits —
+CNN-A never tiles, MobileNet-224's stem and early point-wise layers do.
+``benchmarks/kernel_bench.py`` prints the analytic per-tile VMEM bytes and
+HBM bytes for the fused vs explicit-im2col paths from these quantities.
 """
 from __future__ import annotations
 
@@ -64,6 +91,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import binarize as bz
+
+# Per-program VMEM working-set budget for auto-picked row tiles: half a TPU
+# core's ~16 MiB VMEM, leaving headroom for the pipeline's double buffering.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
 
 
 def pack_taps(B: jax.Array, kh: int, kw: int, C: int) -> jax.Array:
@@ -87,9 +118,11 @@ def repack_taps(B_packed: jax.Array, kh: int, kw: int, C: int) -> jax.Array:
     """Flat [M, ceil(K/8), D] uint8 -> per-tap [M, kh*kw, ceil(C/8), D] uint8
     (K = kh*kw*C row-major over (tap_i, tap_j, c)).
 
-    Weight-layout transform for packed trees that predate the fused kernel;
-    note it runs per call when hit from a traced forward — prefer converting
-    the tree once (binarize_conv_params emits B_tap_packed directly).
+    One-time weight-layout upgrade for packed trees that predate the fused
+    kernel — convert the tree once at load time via
+    ``binconv.ensure_tap_packed`` (``binarize_conv_params`` emits
+    B_tap_packed directly); hitting this from a traced forward re-runs the
+    repack every call and warns (core/binconv.py).
     """
     M, K8, D = B_packed.shape
     K = kh * kw * C
@@ -97,26 +130,81 @@ def repack_taps(B_packed: jax.Array, kh: int, kw: int, C: int) -> jax.Array:
     return pack_taps(B, kh, kw, C)
 
 
+# ---------------------------------------------------------------------------
+# Row-tile sizing (VMEM budget -> BU)
+# ---------------------------------------------------------------------------
+
+def slab_rows(bu: int, kh: int, *, stride: int = 1, pool: int = 1) -> int:
+    """Input rows one program needs for ``bu`` pooled output rows (halo incl.)."""
+    return (bu * pool - 1) * stride + kh
+
+
+def tile_vmem_bytes(W: int, C: int, kh: int, kw: int, bd: int, *, bu: int,
+                    pool: int = 1, stride: int = 1, m: int = 1) -> int:
+    """Analytic per-program VMEM working set of the fused conv kernel for a
+    ``bu``-pooled-row output tile (see the module docstring's table).
+
+    ``W`` is the *padded* input width (SAME resolved upstream).  The same
+    numbers drive ``pick_bu`` and benchmarks/kernel_bench.py.
+    """
+    V = (W - kw) // stride + 1
+    u_tile = bu * pool
+    slab = slab_rows(bu, kh, stride=stride, pool=pool)
+    c8 = -(-C // 8)
+    x_b = slab * W * C * 4
+    patches = u_tile * V * kh * kw * C * 4
+    w_packed = m * kh * kw * c8 * bd
+    w_level = kh * kw * c8 * 8 * bd * 4      # one level's ±1 tile as fp32
+    acc = u_tile * V * bd * 4
+    out = bu * max(V // pool, 1) * bd * 4
+    return x_b + patches + w_packed + w_level + acc + out
+
+
+def pick_bu(H: int, W: int, C: int, kh: int, kw: int, bd: int,
+            pool: int = 1, budget_bytes: int = DEFAULT_VMEM_BUDGET, *,
+            stride: int = 1, m: int = 1) -> int:
+    """Largest row-tile BU (pooled output rows per program) whose VMEM
+    working set fits ``budget_bytes``.
+
+    ``H``/``W`` are the *padded* input dims.  Returns ``Uo = U // pool``
+    (whole-image blocking) whenever the image fits the budget, else the
+    largest fitting BU, with a floor of 1 (a single pooled row; if even
+    that exceeds the budget the kernel still runs — the budget is a target,
+    not a hard VMEM limit).
+    """
+    U = (H - kh) // stride + 1
+    uo = max(U // pool, 1)
+    for bu in range(uo, 1, -1):
+        if tile_vmem_bytes(W, C, kh, kw, bd, bu=bu, pool=pool, stride=stride,
+                           m=m) <= budget_bytes:
+            return bu
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+
 def _kernel(x_ref, bp_ref, alpha_ref, bias_ref, o_ref, *,
             kh: int, kw: int, C: int, stride: int, pool: int,
-            U: int, V: int, group_size: int, m_active: int, relu: bool):
-    """One (image, BD output channels) tile: patches + matmuls + AMU epilogue."""
-    x = x_ref[0]                                     # [Hp, Wp, C]
+            u_tile: int, V: int, group_size: int, m_active: int, relu: bool):
+    """One (image, BD channels, BU rows) tile: patches + matmuls + epilogue."""
+    x = x_ref[0]                                     # [slab_rows, Wp, C]
     # --- AGU: implicit im2col, tap-major to match the K layout (i, j, c) ---
     cols = []
     for i in range(kh):
         for j in range(kw):
-            xs = x[i: i + (U - 1) * stride + 1: stride,
+            xs = x[i: i + (u_tile - 1) * stride + 1: stride,
                    j: j + (V - 1) * stride + 1: stride, :]
-            cols.append(xs.reshape(U * V, C))
-    patches = jnp.concatenate(cols, axis=1).astype(jnp.float32)  # [U*V, K]
+            cols.append(xs.reshape(u_tile * V, C))
+    patches = jnp.concatenate(cols, axis=1).astype(jnp.float32)  # [uV, K]
 
     K = kh * kw * C
     G = K // group_size
     bd = o_ref.shape[-1]
     c8 = bp_ref.shape[2]
     shifts = jax.lax.broadcasted_iota(jnp.uint8, (kh * kw, c8, 8, 1), 2)
-    acc = jnp.zeros((U * V, bd), jnp.float32)
+    acc = jnp.zeros((u_tile * V, bd), jnp.float32)
     for m in range(m_active):                        # static unroll over levels
         packed = bp_ref[m]                           # [kh*kw, C8, bd] uint8
         bits = (packed[:, :, None, :] >> shifts) & jnp.uint8(1)
@@ -132,9 +220,10 @@ def _kernel(x_ref, bp_ref, alpha_ref, bias_ref, o_ref, *,
         )
     # --- AMU epilogue: bias + 2D max-pool + ReLU, then the only HBM write ---
     y = acc + bias_ref[0][None, :]
-    y = y.reshape(U, V, bd)
+    y = y.reshape(u_tile, V, bd)
     if pool > 1:
-        y = y.reshape(U // pool, pool, V // pool, pool, bd).max(axis=(1, 3))
+        y = y.reshape(u_tile // pool, pool, V // pool, pool, bd).max(
+            axis=(1, 3))
     if relu:
         y = jnp.maximum(y, 0.0)
     o_ref[0] = y
@@ -143,7 +232,8 @@ def _kernel(x_ref, bp_ref, alpha_ref, bias_ref, o_ref, *,
 @functools.partial(
     jax.jit,
     static_argnames=("kh", "kw", "stride", "pool", "group_size",
-                     "m_active", "relu", "bd", "interpret"),
+                     "m_active", "relu", "bd", "bu", "vmem_budget",
+                     "interpret"),
 )
 def binary_conv2d_pallas(
     x: jax.Array,
@@ -159,19 +249,26 @@ def binary_conv2d_pallas(
     m_active: int | None = None,
     relu: bool = True,
     bd: int = 128,
+    bu: int | None = None,
+    vmem_budget: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused binary conv + bias + 2D max-pool + ReLU.  fp32 output.
 
     x:            [B, Hp, Wp, C]  (already padded for SAME by the caller)
-    B_tap_packed: [M, kh*kw, ceil(C/8), D] uint8  (see repack_taps)
+    B_tap_packed: [M, kh*kw, ceil(C/8), D] uint8  (see pack_taps)
     alpha:        [M, G, D] float  (G = kh*kw*C // group_size)
     bias:         [D] float
     returns       [B, U//pool, V//pool, D] float32 where
                   U = (Hp-kh)//stride + 1, V = (Wp-kw)//stride + 1.
 
     U and V must be divisible by ``pool`` (downsampling-only pooling, paper
-    §III-B — binconv.relu_maxpool asserts the same).
+    §III-B — binconv.relu_maxpool asserts the same).  ``bu`` fixes the row
+    tile (pooled output rows per program); None auto-picks it from
+    ``vmem_budget`` (default 8 MiB) via :func:`pick_bu` — whole-image
+    blocking whenever the image fits.  Tiled and whole-image blocking are
+    bit-identical: each output element's K-reduction and level order are
+    the same in every tiling.
     """
     B, Hp, Wp, C = x.shape
     M, T, C8, D = B_tap_packed.shape
@@ -192,26 +289,47 @@ def binary_conv2d_pallas(
         bias = jnp.pad(bias, ((0, d_rem),))
     Dp = D + d_rem
 
+    # --- row tiling: BU pooled output rows per program, halo slab input ---
+    uo = U // pool
+    if bu is None:
+        bu = pick_bu(Hp, Wp, C, kh, kw, bd, pool,
+                     vmem_budget or DEFAULT_VMEM_BUDGET,
+                     stride=stride, m=m_active)
+    bu = max(1, min(bu, uo))
+    nt = -(-uo // bu)                       # row tiles (last may be ragged)
+    adv = bu * pool * stride                # slab start advance per tile
+    slab = slab_rows(bu, kh, stride=stride, pool=pool)
+    rows_needed = (nt - 1) * adv + slab     # last slab's end, incl. halo
+    if rows_needed > Hp:  # ragged last tile / halo: zero rows, sliced off
+        x = jnp.pad(x, ((0, 0), (0, rows_needed - Hp), (0, 0), (0, 0)))
+    u_tile = bu * pool
+
     B_tap_packed = B_tap_packed[:m_active]
     alpha = alpha[:m_active].astype(jnp.float32)
     bias2 = bias.astype(jnp.float32).reshape(1, Dp)
 
-    grid = (B, Dp // bd)
+    # row-tile dim innermost: the weight tile stays resident per D-tile
+    # while the x slabs stream through it.
+    grid = (B, Dp // bd, nt)
     out = pl.pallas_call(
         functools.partial(
             _kernel, kh=kh, kw=kw, C=C, stride=stride, pool=pool,
-            U=U, V=V, group_size=group_size, m_active=m_active, relu=relu),
+            u_tile=u_tile, V=V, group_size=group_size, m_active=m_active,
+            relu=relu),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, Hp, Wp, C), lambda b, d: (b, 0, 0, 0)),
-            pl.BlockSpec((m_active, T, C8, bd), lambda b, d: (0, 0, 0, d)),
-            pl.BlockSpec((m_active, G, bd), lambda b, d: (0, 0, d)),
-            pl.BlockSpec((1, bd), lambda b, d: (0, d)),
+            # overlapping halo slabs need element offsets -> Unblocked
+            pl.BlockSpec((1, slab, Wp, C),
+                         lambda b, d, t: (b, t * adv, 0, 0),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((m_active, T, C8, bd), lambda b, d, t: (0, 0, 0, d)),
+            pl.BlockSpec((m_active, G, bd), lambda b, d, t: (0, 0, d)),
+            pl.BlockSpec((1, bd), lambda b, d, t: (0, d)),
         ],
-        out_specs=pl.BlockSpec((1, U // pool, V // pool, bd),
-                               lambda b, d: (b, 0, 0, d)),
-        out_shape=jax.ShapeDtypeStruct((B, U // pool, V // pool, Dp),
+        out_specs=pl.BlockSpec((1, bu, V // pool, bd),
+                               lambda b, d, t: (b, t, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((B, nt * bu, V // pool, Dp),
                                        jnp.float32),
         interpret=interpret,
     )(x, B_tap_packed, alpha, bias2)
-    return out[..., :D]
+    return out[:, :uo, :, :D]

@@ -1,0 +1,202 @@
+"""Pallas TPU kernel: fused binary depth-wise convolution (paper §V-A3).
+
+MobileNet's depth-wise 3×3 layers are memory-bound — each output channel
+reads one input channel through a kh·kw window, so there is no reduction for
+the MXU to amortize and the paper maps them to a *channel-wise* binary
+approximation with D_arch = 1 (a single filter per PA).  Running them as fp
+``lax.conv`` breaks the binary deployment story end to end: the activations
+stream through HBM twice (conv out, then ReLU) and the weights stay fp32.
+This kernel keeps the whole dw stage on-chip:
+
+  1. unpack the bit-packed per-tap filters and fold the per-(level, channel)
+     alpha into one *effective* tap weight per (tap, channel) in VMEM —
+     the depth-wise conv is linear in the weights, so
+     ``sum_m alpha[m,c]·B[m,t,c]`` collapses the level loop into the
+     reconstruction W_hat the paper's Eq. 1 defines (HBM traffic stays the
+     packed bits + alpha; m_active < M truncates the sum, §IV-D);
+  2. accumulate the kh·kw strided-slice taps channel-wise on the VPU
+     (no matmul — there is nothing to contract);
+  3. bias + ReLU epilogue before the only HBM write-back.
+
+``B_tap_packed`` weight layout (channel-wise, byte-aligned per tap)
+-------------------------------------------------------------------
+    B_tap_packed [M, kh·kw, ceil(C/8)]   uint8
+
+``B_tap_packed[m, t, c8]`` holds channels ``8*c8 .. 8*c8+7`` of the level-m
+±1 depth-wise weights at spatial tap ``t = i*kw + j``, LSB-first like the
+conv kernel: bit j == 1 iff the weight for channel ``8*c8 + j`` is +1.
+The C axis is padded to a byte boundary with +1 bits, sliced off after
+unpacking.  ``pack_dw_taps`` builds the layout from ±1 tensors;
+``binconv.binarize_dwconv_params`` emits it plus the channel-wise
+``alpha [M, C]``.  The jnp oracle (kernels/ref.py binary_dwconv_relu_ref)
+unpacks the same bytes and runs fp ``lax.conv`` on the reconstruction,
+which is what keeps the packing and the kernel cross-checked.
+
+VMEM blocking
+-------------
+Grid: ``(B, ceil(U/BU))`` — row tiles only; the channel axis stays whole
+(dw feature maps are large exactly when C is small, and C·4 bytes per pixel
+is the whole working set — there is no D blow-up).  Row tiles use the same
+halo-slab scheme as kernels/binary_conv.py: tile ``t`` reads the input rows
+``[t·BU·stride, t·BU·stride + (BU-1)·stride + kh)`` via a ``pl.Unblocked``
+element-offset index map, with the wrapper zero-padding the row axis so
+ragged last tiles stay in bounds.  ``pick_bu_dw`` sizes BU from the same
+8 MiB default budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import binarize as bz
+from repro.kernels.binary_conv import DEFAULT_VMEM_BUDGET, slab_rows
+
+
+def pack_dw_taps(B: jax.Array) -> jax.Array:
+    """±1 int8 [M, kh*kw, C] -> channel-packed [M, kh*kw, ceil(C/8)] uint8.
+
+    The C axis is padded to a byte boundary with +1 bits; the kernel and the
+    oracle slice them off after unpacking, so their value never matters.
+    """
+    M, T, C = B.shape
+    c_pad = (-C) % 8
+    if c_pad:
+        B = jnp.concatenate([B, jnp.ones((M, T, c_pad), jnp.int8)], axis=2)
+    Cp = C + c_pad
+    return bz.pack_bits(B.reshape(M * T, Cp, 1)).reshape(M, T, Cp // 8)
+
+
+def unpack_dw_taps(packed: jax.Array, C: int) -> jax.Array:
+    """uint8 [M, kh*kw, ceil(C/8)] -> ±1 int8 [M, kh*kw, C] (inverse)."""
+    M, T, c8 = packed.shape
+    B = bz.unpack_bits(packed.reshape(M * T, c8, 1), c8 * 8)
+    return B.reshape(M, T, c8 * 8)[:, :, :C]
+
+
+def tile_vmem_bytes_dw(W: int, C: int, kh: int, kw: int, *, bu: int,
+                       stride: int = 1, m: int = 1) -> int:
+    """Analytic per-program VMEM working set for a ``bu``-row dw tile."""
+    V = (W - kw) // stride + 1
+    slab = slab_rows(bu, kh, stride=stride)
+    c8 = -(-C // 8)
+    x_b = slab * W * C * 4
+    w_packed = m * kh * kw * c8
+    w_eff = kh * kw * c8 * 8 * 4 * (m + 1)   # unpacked levels + folded taps
+    acc = bu * V * C * 4
+    out = bu * V * C * 4
+    return x_b + w_packed + w_eff + acc + out
+
+
+def pick_bu_dw(H: int, W: int, C: int, kh: int, kw: int,
+               budget_bytes: int = DEFAULT_VMEM_BUDGET, *,
+               stride: int = 1, m: int = 1) -> int:
+    """Largest dw row tile (output rows per program) fitting the budget."""
+    U = (H - kh) // stride + 1
+    for bu in range(max(U, 1), 1, -1):
+        if tile_vmem_bytes_dw(W, C, kh, kw, bu=bu, stride=stride,
+                              m=m) <= budget_bytes:
+            return bu
+    return 1
+
+
+def _dw_kernel(x_ref, bp_ref, alpha_ref, bias_ref, o_ref, *,
+               kh: int, kw: int, C: int, stride: int,
+               u_tile: int, V: int, m_active: int, relu: bool):
+    """One (image, BU rows) tile: fold levels, tap-accumulate, epilogue."""
+    x = x_ref[0].astype(jnp.float32)                 # [slab, Wp, C]
+    T, c8 = bp_ref.shape[1], bp_ref.shape[2]
+    # fold the level sum into one effective fp tap weight per (tap, channel):
+    # W_hat[t, c] = sum_{m < m_active} alpha[m, c] * B[m, t, c]  (Eq. 1)
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (1, T, c8, 8), 3)
+    bits = (bp_ref[...][:, :, :, None] >> shifts) & jnp.uint8(1)
+    w = (bits.astype(jnp.int8) * 2 - 1).reshape(m_active, T, c8 * 8)
+    w = w[:, :, :C].astype(jnp.float32)              # [m, T, C] ±1
+    eff = jnp.sum(w * alpha_ref[...][:, None, :], axis=0)     # [T, C]
+    # channel-wise tap accumulation on the VPU (no contraction to feed MXU)
+    acc = jnp.zeros((u_tile, V, C), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            xs = x[i: i + (u_tile - 1) * stride + 1: stride,
+                   j: j + (V - 1) * stride + 1: stride, :]
+            acc = acc + xs * eff[i * kw + j][None, None, :]
+    y = acc + bias_ref[0][None, None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[0] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "m_active", "relu", "bu",
+                     "vmem_budget", "interpret"),
+)
+def binary_dwconv2d_pallas(
+    x: jax.Array,
+    B_tap_packed: jax.Array,
+    alpha: jax.Array,
+    bias: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    m_active: int | None = None,
+    relu: bool = True,
+    bu: int | None = None,
+    vmem_budget: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused binary depth-wise conv + bias + ReLU.  fp32 output.
+
+    x:            [B, Hp, Wp, C]  (already padded for SAME by the caller)
+    B_tap_packed: [M, kh*kw, ceil(C/8)] uint8  (see pack_dw_taps)
+    alpha:        [M, C] float   (channel-wise, paper §V-A3 / D_arch=1)
+    bias:         [C] float
+    returns       [B, U, V, C] float32, U = (Hp-kh)//stride + 1.
+    """
+    B, Hp, Wp, C = x.shape
+    M, T, c8 = B_tap_packed.shape
+    assert T == kh * kw, (T, kh, kw)
+    assert c8 * 8 >= C, (c8, C)
+    assert alpha.shape == (M, C), (alpha.shape, M, C)
+    m_active = min(m_active or M, M)
+    U = (Hp - kh) // stride + 1
+    V = (Wp - kw) // stride + 1
+
+    if bu is None:
+        bu = pick_bu_dw(Hp, Wp, C, kh, kw,
+                        vmem_budget or DEFAULT_VMEM_BUDGET,
+                        stride=stride, m=m_active)
+    bu = max(1, min(bu, U))
+    nt = -(-U // bu)
+    adv = bu * stride
+    slab = slab_rows(bu, kh, stride=stride)
+    rows_needed = (nt - 1) * adv + slab
+    if rows_needed > Hp:  # ragged last tile: zero rows, sliced off below
+        x = jnp.pad(x, ((0, 0), (0, rows_needed - Hp), (0, 0), (0, 0)))
+
+    bp = B_tap_packed[:m_active]
+    alpha = alpha[:m_active].astype(jnp.float32)
+    bias2 = bias.astype(jnp.float32).reshape(1, C)
+
+    grid = (B, nt)
+    out = pl.pallas_call(
+        functools.partial(
+            _dw_kernel, kh=kh, kw=kw, C=C, stride=stride,
+            u_tile=bu, V=V, m_active=m_active, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, slab, Wp, C),
+                         lambda b, t: (b, t * adv, 0, 0),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((m_active, T, c8), lambda b, t: (0, 0, 0)),
+            pl.BlockSpec((m_active, C), lambda b, t: (0, 0)),
+            pl.BlockSpec((1, C), lambda b, t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bu, V, C), lambda b, t: (b, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nt * bu, V, C), jnp.float32),
+        interpret=interpret,
+    )(x, bp, alpha, bias2)
+    return out[:, :U]

@@ -82,11 +82,16 @@ def binary_conv2d(
     relu: bool = True,
     interpret: bool = False,
     bd: int | None = None,
+    bu: int | None = None,
+    vmem_budget: int | None = None,
 ) -> jax.Array:
     """Fused binary conv + bias + max-pool + ReLU via the Pallas kernel.
 
     x: [B, H, W, C] -> [B, U//pool, V//pool, D] in fp32.  The im2col tensor
     never touches HBM (patch extraction runs in VMEM inside the kernel).
+    ``bu`` fixes the output row tile per program; None auto-picks it from
+    the VMEM budget (kernels/binary_conv.py pick_bu) — whole-image blocking
+    whenever the feature map fits.
     """
     from repro.core.binconv import same_pads
 
@@ -103,5 +108,43 @@ def binary_conv2d(
         x, B_tap_packed, alpha, bias,
         kh=kh, kw=kw, stride=stride, pool=pool, group_size=group_size,
         m_active=m_active, relu=relu, bd=bd or _pick_block(D, 128),
-        interpret=interpret,
+        bu=bu, vmem_budget=vmem_budget, interpret=interpret,
+    )
+
+
+def binary_dwconv2d(
+    x: jax.Array,
+    B_tap_packed: jax.Array,
+    alpha: jax.Array,
+    bias: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    m_active: int | None = None,
+    relu: bool = True,
+    interpret: bool = False,
+    bu: int | None = None,
+    vmem_budget: int | None = None,
+) -> jax.Array:
+    """Fused binary depth-wise conv + bias + ReLU via the Pallas kernel.
+
+    x: [B, H, W, C] -> [B, U, V, C] fp32 (paper §V-A3: depth-wise layers are
+    approximated channel-wise; D_arch = 1).  SAME padding is resolved here
+    like :func:`binary_conv2d`, so the kernel only sees pre-padded inputs.
+    """
+    from repro.core.binconv import same_pads
+    from repro.kernels import binary_dwconv as bdw
+
+    B, H, W, C = x.shape
+    if padding == "SAME":
+        x = jnp.pad(x, ((0, 0), same_pads(H, kh, stride),
+                        same_pads(W, kw, stride), (0, 0)))
+    elif padding != "VALID":
+        raise ValueError(padding)
+    return bdw.binary_dwconv2d_pallas(
+        x, B_tap_packed, alpha, bias,
+        kh=kh, kw=kw, stride=stride, m_active=m_active, relu=relu,
+        bu=bu, vmem_budget=vmem_budget, interpret=interpret,
     )

@@ -109,3 +109,42 @@ def fused_binary_conv_relu_pool_ref(
     B, U, V, D = y.shape
     y = y.reshape(B, U // pool, pool, V // pool, pool, D).max(axis=(2, 4))
     return jnp.maximum(y, 0.0) if relu else y
+
+
+def binary_dwconv_relu_ref(
+    x: jax.Array,
+    B_tap_packed: jax.Array,
+    alpha: jax.Array,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: str = "SAME",
+    m_active: int | None = None,
+    bias: jax.Array | None = None,
+    relu: bool = True,
+) -> jax.Array:
+    """±1 oracle for the fused depth-wise kernel (kernels/binary_dwconv.py).
+
+    Unpacks the channel-packed ``[M, kh*kw, ceil(C/8)]`` taps to ±1,
+    reconstructs the effective depth-wise filter W_hat[t, c] =
+    sum_{m<m_active} alpha[m, c] * B[m, t, c] (paper Eq. 1, channel-wise
+    §V-A3), and runs it through fp ``lax.conv`` with feature groups — the
+    exact HBM-bound path the Pallas kernel replaces.  x: [B, H, W, C] ->
+    [B, U, V, C] float32.
+    """
+    from repro.kernels.binary_dwconv import unpack_dw_taps
+
+    C = x.shape[-1]
+    M = B_tap_packed.shape[0]
+    m = min(m_active or M, M)
+    B = unpack_dw_taps(B_tap_packed[:m], C).astype(jnp.float32)  # [m, T, C]
+    W_hat = jnp.einsum("mtc,mc->tc", B, alpha[:m].astype(jnp.float32))
+    W_hat = W_hat.reshape(kh, kw, 1, C)          # HWIO, depth-wise groups
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), W_hat, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=C)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return jnp.maximum(y, 0.0) if relu else y

@@ -32,6 +32,21 @@ back to masked token-wise warmup (``prefill="tokenwise"`` forces the
 fallback everywhere; the parity tests and the admission-latency benchmark
 compare both).
 
+Because the prefill forward is jitted per prompt length, mixed-length
+traffic would compile one program per distinct length.  ``Server`` therefore
+**buckets** prompt lengths (``prefill_buckets``: powers of two by default,
+or an explicit bucket list): the prompt is right-padded to the bucket
+boundary before the forward, so the compile count is bounded by the number
+of buckets.  Right-padding is exact for *positional-KV-only* caches (dense /
+moe without a sliding window): causal attention makes rows < L independent
+of the pad tokens, and the pad KV rows written at positions >= L are
+transient — the slot's own decode overwrites each row before attending past
+it, the same invariant grouped decode relies on.  Recurrent-state families
+(ssm/hybrid) and rolling SWA caches are served with exact lengths instead:
+an ssm final state would absorb the pad tokens, and a ring cache would let
+pad rows wrap onto live positions.  ``stats`` exposes the bucket behavior
+(``prefill_bucket_hits`` / ``prefill_unique_lens``).
+
 `Server` implements continuous batching over a request queue: prefill on
 arrival, then step-wise batched decode; slots free as sequences finish.
 """
@@ -65,14 +80,29 @@ class Server:
     ``prefill`` selects the admission path: ``"auto"`` (default) uses bulk
     prefill when the family supports it, ``"bulk"`` requires it,
     ``"tokenwise"`` forces the step-wise reference path (used by the parity
-    tests and the admission-latency benchmark).  ``stats`` counts device
-    programs per path: ``bulk_prefills`` (one per bulk admission),
-    ``tokenwise_prefill_steps`` (one per warmed prompt token) and
-    ``decode_steps`` (one per served group per round).
+    tests and the admission-latency benchmark).
+
+    ``prefill_buckets`` bounds the bulk-prefill compile count under
+    mixed-length traffic: ``"pow2"`` (default) right-pads each prompt to the
+    next power of two, an explicit sorted list pads to the smallest bucket
+    that fits (lengths beyond the last bucket run exact), ``None`` disables
+    padding.  Padding only applies where it is provably exact — positional-
+    KV-only caches (dense/moe, no sliding window); recurrent/rolling caches
+    always prefill at the exact length (module docstring).
+
+    ``stats`` counts device programs per path: ``bulk_prefills`` (one per
+    bulk admission), ``tokenwise_prefill_steps`` (one per warmed prompt
+    token), ``decode_steps`` (one per served group per round); for the
+    bucketing: ``prefill_bucket_hits`` (bulk prefills that reused an
+    already-compiled padded length) and ``prefill_unique_lens`` (distinct
+    (m_active, padded length) pairs seen — each pair is one compiled
+    prefill executable, since the per-m jitted functions each specialize
+    per length).
     """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
-                 max_len: int = 256, prefill: str = "auto"):
+                 max_len: int = 256, prefill: str = "auto",
+                 prefill_buckets: str | list[int] | None = "pow2"):
         from repro.models import common as cm
 
         cm.set_axis_rules(None)  # single-host serve: no mesh constraints
@@ -81,11 +111,17 @@ class Server:
         if prefill == "bulk" and cfg.family not in api.BULK_PREFILL_FAMILIES:
             raise ValueError(
                 f"bulk prefill is not implemented for family={cfg.family!r}")
+        if not (prefill_buckets is None or prefill_buckets == "pow2"
+                or isinstance(prefill_buckets, (list, tuple))):
+            raise ValueError(f"unknown prefill_buckets {prefill_buckets!r}")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.prefill_mode = prefill
+        self.prefill_buckets = (sorted(prefill_buckets)
+                                if isinstance(prefill_buckets, (list, tuple))
+                                else prefill_buckets)
         self.cache = api.init_cache(cfg, max_batch, max_len)
         self.pos = np.zeros((max_batch,), np.int32)
         self.slots: list[Request | None] = [None] * max_batch
@@ -95,13 +131,37 @@ class Server:
         self._decode_fns: dict[int | None, Callable] = {}
         self._prefill_fns: dict[int | None, Callable] = {}
         self._scatter_fn = jax.jit(functools.partial(api.scatter_cache, cfg))
+        self._prefill_lens_seen: set[tuple[int | None, int]] = set()
         self.stats = {"bulk_prefills": 0, "tokenwise_prefill_steps": 0,
-                      "decode_steps": 0}
+                      "decode_steps": 0, "prefill_bucket_hits": 0,
+                      "prefill_unique_lens": 0}
 
     @property
     def _bulk(self) -> bool:
         return (self.prefill_mode != "tokenwise"
                 and self.cfg.family in api.BULK_PREFILL_FAMILIES)
+
+    @property
+    def _pad_safe(self) -> bool:
+        """Right-padding the prefill is exact only for positional-KV-only
+        caches: causal attention keeps rows < L pad-independent and the pad
+        rows at positions >= L are transient (overwritten before attended).
+        Recurrent state (ssm/hybrid) would absorb the pads into the final
+        state; a rolling SWA ring would let pad rows wrap onto live ones."""
+        return (self.cfg.family in ("dense", "moe")
+                and self.cfg.sliding_window is None)
+
+    def _padded_len(self, L: int) -> int:
+        """Bucketed prefill length for a true prompt-prefix length ``L``."""
+        if self.prefill_buckets is None or not self._pad_safe or L < 1:
+            return L
+        if self.prefill_buckets == "pow2":
+            b = 1
+            while b < L:
+                b *= 2
+        else:
+            b = next((x for x in self.prefill_buckets if x >= L), L)
+        return max(min(b, self.max_len - 1), L)
 
     def _norm_m(self, m_active: int | None) -> int | None:
         """Canonical per-request level count: clamp to [1, M] (a request
@@ -168,20 +228,35 @@ class Server:
     def _prefill(self, slot: int, req: Request):
         """Warm slot ``slot``'s cache over the prompt.
 
-        Bulk path: one ``api.prefill`` forward over ``prompt[:-1]`` (B=1),
-        then scatter the returned cache into the slot's row — admission is
-        O(1) device programs instead of O(prompt_len).  step() feeds the
-        last prompt token and collects the first prediction (no
-        double-insert into the cache).  Token-wise fallback feeds the same
-        tokens through the masked decode step.
+        Bulk path: one ``api.prefill`` forward over ``prompt[:-1]`` (B=1) —
+        right-padded to the length bucket where exact (``_padded_len``) —
+        then scatter the returned cache into the slot's row: admission is
+        O(1) device programs instead of O(prompt_len), and the compile
+        count is bounded by the bucket count instead of the distinct-length
+        count.  step() feeds the last prompt token and collects the first
+        prediction (no double-insert into the cache).  Token-wise fallback
+        feeds the same tokens through the masked decode step.
         """
         self.pos[slot] = 0
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         if prompt.size <= 1:
             return
         if self._bulk:
+            L = prompt.size - 1
+            Lb = self._padded_len(L)
+            toks = prompt[:-1]
+            if Lb > L:  # pad KV rows >= L are transient (see _pad_safe)
+                toks = np.concatenate(
+                    [toks, np.zeros((Lb - L,), np.int32)])
+            key = (self._norm_m(req.m_active), Lb)
+            if key in self._prefill_lens_seen:
+                self.stats["prefill_bucket_hits"] += 1
+            else:
+                self._prefill_lens_seen.add(key)
+                self.stats["prefill_unique_lens"] = len(
+                    self._prefill_lens_seen)
             fn = self._prefill_for(req.m_active)
-            _, part = fn(self.params, jnp.asarray(prompt[None, :-1]))
+            _, part = fn(self.params, jnp.asarray(toks[None]))
             self.cache = self._scatter_fn(self.cache, slot, part)
             self.pos[slot] = prompt.size - 1
             self.stats["bulk_prefills"] += 1

@@ -95,8 +95,8 @@ def init_mobilenet(key, *, width_mult: float = 1.0, n_classes: int = 1000,
     for i, (stride, cout) in enumerate(MOBILENET_BLOCKS):
         cout = c(cout)
         kd, kp = ks[1 + 2 * i], ks[2 + 2 * i]
-        params[f"dw{i}"] = {
-            "w": (jax.random.normal(kd, (3, 3, cin, 1)) * 0.1).astype(dtype),
+        params[f"dw{i}"] = {  # HWIO depth-wise layout: [kh, kw, 1, C]
+            "w": (jax.random.normal(kd, (3, 3, 1, cin)) * 0.1).astype(dtype),
             "b": jnp.zeros((cin,), dtype)}
         params[f"pw{i}"] = {
             "w": (jax.random.normal(kp, (1, 1, cin, cout)) * (1.0 / jnp.sqrt(cin))
@@ -109,26 +109,34 @@ def init_mobilenet(key, *, width_mult: float = 1.0, n_classes: int = 1000,
     return params
 
 
-def _depthwise(params, x, stride):
-    """Depth-wise 3x3 (channel-wise binary approx: single filter/channel)."""
-    y = jax.lax.conv_general_dilated(
-        x, params["w"].astype(x.dtype),
-        window_strides=(stride, stride), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        feature_group_count=x.shape[-1])
-    return y + params["b"].astype(y.dtype)
-
-
 def mobilenet_forward(params, x: jax.Array, quant: QuantConfig = DENSE):
     """x: [B, R, R, 3] -> logits.  Point-wise convs carry the binary matmuls;
-    depth-wise convs are memory-bound (paper §V-A3: D_arch=1 there)."""
+    depth-wise convs are memory-bound and approximated channel-wise (paper
+    §V-A3: D_arch=1 there).  With a packed tree (``binarize_mobilenet``) and
+    ``quant.fuse_conv`` + ``use_pallas`` the whole dw->pw stack runs the
+    fused binary kernels — zero fp ``lax.conv`` calls end to end."""
     y = binconv.conv2d_relu_pool(params["stem"], x, stride=2, padding="SAME",
                                  pool=1, quant=quant)
     for i, (stride, _) in enumerate(MOBILENET_BLOCKS):
-        y = jax.nn.relu(_depthwise(params[f"dw{i}"], y, stride))
+        y = binconv.depthwise_relu(params[f"dw{i}"], y, stride=stride,
+                                   quant=quant)
         y = binconv.conv2d_relu_pool(params[f"pw{i}"], y, pool=1, quant=quant)
     y = jnp.mean(y, axis=(1, 2))  # global average pool (offloaded to CPU in paper)
     return bl.apply_linear(params["head"], y, quant)
+
+
+def binarize_mobilenet(params, quant: QuantConfig):
+    """Offline conversion of every MobileNet layer to packed-binary form.
+
+    stem/point-wise convs use the grouped conv packing (B_packed +
+    B_tap_packed); depth-wise layers use the channel-wise dw packing
+    (paper §V-A3); the classifier head packs like any linear."""
+    out = {"stem": binconv.binarize_conv_params(params["stem"], quant)}
+    for i in range(len(MOBILENET_BLOCKS)):
+        out[f"dw{i}"] = binconv.binarize_dwconv_params(params[f"dw{i}"], quant)
+        out[f"pw{i}"] = binconv.binarize_conv_params(params[f"pw{i}"], quant)
+    out["head"] = bl.binarize_params(params["head"], quant)
+    return out
 
 
 def cnn_a_macs() -> int:

@@ -1,11 +1,15 @@
 """Fused implicit-GEMM binary-conv kernel vs the jnp conv oracle, plus the
-conv-path bugfix regressions (im2col SAME parity, odd-group-size blocks).
+conv-path bugfix regressions (im2col SAME parity, odd-group-size blocks)
+and the spatial row-tiling tier (halo slabs, pick_bu, tiled bit-exactness).
 
 Mirrors the paper's §V-A2 verification style: the Pallas kernel (interpret
 mode on CPU) must match kernels/ref.py to fp32-accumulation tolerance across
 a shape sweep covering K % 8 != 0, m_active < M, stride 2, SAME/VALID, and
-pool ∈ {1, 2}.
+pool ∈ {1, 2}; row-tiled blocking must additionally be *bit-exact* against
+whole-image blocking across stride/pool/ragged-tile combinations.
 """
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -76,6 +80,30 @@ class TestFusedBinaryConvKernel:
         via_repack = bck.repack_taps(p["B_packed"], 3, 3, 5)
         np.testing.assert_array_equal(np.asarray(via_repack),
                                       np.asarray(p["B_tap_packed"]))
+
+    def test_legacy_packed_tree_warns_once_and_matches(self):
+        """A tree without B_tap_packed still runs fused (warn-once repack);
+        ensure_tap_packed upgrades it to the silent fast path."""
+        p, kx = _conv_case(13, 3, 3, 5, 12, 2)
+        legacy = {k: v for k, v in p.items() if k != "B_tap_packed"}
+        x = jax.random.normal(kx, (1, 8, 8, 5), jnp.float32)
+        qc = QuantConfig(mode="binary", M=2, fuse_conv=True, use_pallas=True,
+                         interpret=True)
+        binconv._warned_legacy_repack = False
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            y_legacy = binconv.conv2d_relu_pool(legacy, x, quant=qc)
+            binconv.conv2d_relu_pool(legacy, x, quant=qc)  # second: silent
+        runtime = [r for r in rec if issubclass(r.category, RuntimeWarning)
+                   and "ensure_tap_packed" in str(r.message)]
+        assert len(runtime) == 1, [str(r.message) for r in rec]
+        upgraded = binconv.ensure_tap_packed(legacy, C=5)
+        np.testing.assert_array_equal(np.asarray(upgraded["B_tap_packed"]),
+                                      np.asarray(p["B_tap_packed"]))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # no warning on the upgraded tree
+            y_up = binconv.conv2d_relu_pool(upgraded, x, quant=qc)
+        np.testing.assert_array_equal(np.asarray(y_legacy), np.asarray(y_up))
 
     def test_conv2d_relu_pool_routes_fused(self):
         """Model-layer routing: fused flag on == fused flag off (unfused)."""
@@ -182,3 +210,80 @@ class TestOddGroupSizeMatmul:
                                       group_size=12, m_active=2)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-4)
+
+
+class TestRowTiledBlocking:
+    """Spatial row tiling of the fused conv kernel: BU-row output tiles with
+    halo input slabs must be *bit-exact* against whole-image blocking (the
+    BU = Uo special case) — each output element runs the identical K
+    reduction and level order in every tiling."""
+
+    # kh, kw, C, D, H, W, stride, pool, bu  (bu chosen to force ragged tiles
+    # for most cases: Uo % bu != 0)
+    TILED = [
+        (3, 3, 3, 16, 13, 11, 1, 1, 3),    # C%8!=0, ragged: Uo=11, 4 tiles
+        (7, 7, 3, 5, 48, 48, 1, 2, 4),     # CNN-A conv1, pool 2, Uo=21 ragged
+        (4, 4, 5, 24, 21, 21, 1, 6, 1),    # pool 6, one pooled row per tile
+        (4, 4, 5, 24, 21, 21, 2, 1, 2),    # stride 2, Uo=9 ragged
+        (2, 2, 4, 7, 9, 9, 2, 2, 1),       # stride 2 + pool 2
+        (3, 3, 8, 12, 9, 9, 1, 1, 5),      # odd U=7 not divisible by bu
+        (1, 1, 16, 24, 8, 8, 1, 1, 3),     # point-wise, ragged
+    ]
+
+    @pytest.mark.parametrize("kh,kw,C,D,H,W,stride,pool,bu", TILED)
+    def test_tiled_bit_exact_vs_whole_image(self, kh, kw, C, D, H, W, stride,
+                                            pool, bu):
+        p, kx = _conv_case(kh + kw + C + bu, kh, kw, C, D, 2)
+        x = jax.random.normal(kx, (2, H, W, C), jnp.float32)
+        gs = kh * kw * C // p["alpha"].shape[1]
+        kw_args = dict(kh=kh, kw=kw, stride=stride, pool=pool, group_size=gs,
+                       interpret=True)
+        whole = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"], bu=10**6, **kw_args)
+        tiled = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"], bu=bu, **kw_args)
+        np.testing.assert_array_equal(np.asarray(whole), np.asarray(tiled))
+
+    @pytest.mark.parametrize("kh,kw,C,D,H,W,stride,pool,bu", TILED[:3])
+    def test_tiled_matches_oracle(self, kh, kw, C, D, H, W, stride, pool, bu):
+        """Tiled blocking through the public wrapper still matches the
+        HBM-materialized im2col oracle."""
+        p, kx = _conv_case(kh * 10 + bu, kh, kw, C, D, 2)
+        x = jax.random.normal(kx, (2, H, W, C), jnp.float32)
+        got = kops.binary_conv2d(
+            x, p["B_tap_packed"], p["alpha"], p["b"], kh=kh, kw=kw,
+            stride=stride, pool=pool, bu=bu, interpret=True)
+        want = kref.fused_binary_conv_relu_pool_ref(
+            x, p["B_packed"], p["alpha"], kh=kh, kw=kw, stride=stride,
+            pool=pool, bias=p["b"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_pick_bu_respects_budget_and_recovers_whole_image(self):
+        # small map: whole image fits the default budget
+        assert bck.pick_bu(48, 48, 3, 7, 7, 8) == 42  # CNN-A conv1, Uo=U=42
+        # MobileNet-224 early point-wise: whole image exceeds 8 MiB, the
+        # picked tile fits, and the floor is 1
+        bu = bck.pick_bu(112, 112, 32, 1, 1, 64, 1, m=2)
+        uo = 112
+        whole = bck.tile_vmem_bytes(112, 32, 1, 1, 64, bu=uo, m=2)
+        tiled = bck.tile_vmem_bytes(112, 32, 1, 1, 64, bu=bu, m=2)
+        assert whole > bck.DEFAULT_VMEM_BUDGET
+        assert tiled <= bck.DEFAULT_VMEM_BUDGET
+        assert 1 <= bu < uo
+        # tiny budget degrades to a single pooled row, never 0
+        assert bck.pick_bu(112, 112, 32, 1, 1, 64, 1, 1024, m=2) == 1
+
+    def test_auto_bu_engages_on_large_maps(self):
+        """The wrapper's auto pick tiles a map that exceeds the budget and
+        still matches a forced whole-image run (tolerance-free)."""
+        p, kx = _conv_case(99, 1, 1, 16, 32, 2)
+        x = jax.random.normal(kx, (1, 40, 40, 16), jnp.float32)
+        gs = 16 // p["alpha"].shape[1]
+        kw_args = dict(kh=1, kw=1, group_size=gs, interpret=True)
+        auto = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"],
+            vmem_budget=64 * 1024, **kw_args)  # force tiling via tiny budget
+        whole = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"], bu=10**6, **kw_args)
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(whole))

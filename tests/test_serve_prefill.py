@@ -49,13 +49,18 @@ class TestPrefillParity:
 
         The transformer path is bit-identical; recurrent state tolerates
         float op-order differences (chunked SSD vs sequential recurrence)
-        at the 1e-5 level."""
+        at the 1e-5 level.  Length bucketing is disabled here: it writes
+        pad KV into the *transient* rows >= prompt_len that token-wise
+        warmup leaves zeroed — dead state by the overwrite-before-attend
+        invariant, but not bitwise comparable; TestPrefillBucketing checks
+        the bucketed path's parity on live outputs instead."""
         cfg = _cfg(family)
         params = api.init_params(cfg, jax.random.PRNGKey(0))
         prompt = np.array([3, 7, 11, 2, 9, 4], np.int32)
         results = {}
         for mode in ("bulk", "tokenwise"):
-            srv = Server(cfg, params, max_batch=2, max_len=32, prefill=mode)
+            srv = Server(cfg, params, max_batch=2, max_len=32, prefill=mode,
+                         prefill_buckets=None)
             req = Request(prompt=prompt.copy(), max_new_tokens=3)
             assert srv.admit(req)
             rows = _slot_rows(cfg, srv.cache, 0)
@@ -76,6 +81,67 @@ class TestPrefillParity:
         assert srv.admit(Request(prompt=prompt, max_new_tokens=1))
         assert srv.stats["bulk_prefills"] == 1
         assert srv.stats["tokenwise_prefill_steps"] == 0
+
+
+class TestPrefillBucketing:
+    def test_bucketing_bounds_compiles_and_preserves_outputs(self):
+        """Mixed-length traffic: padded lengths collapse onto pow2 buckets
+        (bounded compile count) while token streams and logits match the
+        exact-length server."""
+        cfg = _cfg("transformer")
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        prompts = [np.arange(1, n + 1, dtype=np.int32)
+                   for n in (3, 5, 6, 7, 10)]  # prefix lens 2,4,5,6,9
+        results = {}
+        for buckets in ("pow2", None):
+            srv = Server(cfg, params, max_batch=2, max_len=32,
+                         prefill_buckets=buckets)
+            toks, logits = [], []
+            for p in prompts:
+                req = Request(prompt=p.copy(), max_new_tokens=3)
+                assert srv.admit(req)
+                srv.run_until_done()
+                toks.append(req.out_tokens)
+                logits.append(req.last_logits)
+            results[buckets] = (toks, logits, dict(srv.stats))
+        assert results["pow2"][0] == results[None][0]
+        for a, b in zip(results["pow2"][1], results[None][1]):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+        # lens 2,4,5,6,9 -> buckets 2,4,8,8,16: 4 unique vs 5 exact
+        assert results["pow2"][2]["prefill_unique_lens"] == 4
+        assert results["pow2"][2]["prefill_bucket_hits"] == 1
+        assert results[None][2]["prefill_unique_lens"] == 5
+        assert results[None][2]["prefill_bucket_hits"] == 0
+
+    def test_explicit_bucket_list(self):
+        cfg = _cfg("transformer")
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(cfg, params, max_batch=2, max_len=32,
+                     prefill_buckets=[8, 16])
+        for n in (3, 6, 9):  # prefix lens 2, 5, 8 -> all bucket to 8
+            assert srv.admit(Request(prompt=np.arange(1, n + 1,
+                                                      dtype=np.int32),
+                                     max_new_tokens=1))
+            srv.run_until_done()
+        assert srv.stats["prefill_unique_lens"] == 1
+        assert srv.stats["prefill_bucket_hits"] == 2
+
+    @pytest.mark.parametrize("family", ["ssm", "hybrid", "swa"])
+    def test_recurrent_and_swa_families_stay_exact(self, family):
+        """Padding is not exact for recurrent final states or rolling SWA
+        rings — those families must prefill at the true length even with
+        bucketing enabled (the default)."""
+        cfg = _cfg(family)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(cfg, params, max_batch=2, max_len=32)
+        assert not srv._pad_safe
+        for n in (3, 5):  # distinct prefix lens stay distinct
+            assert srv.admit(Request(prompt=np.arange(1, n + 1,
+                                                      dtype=np.int32),
+                                     max_new_tokens=1))
+            srv.run_until_done()
+        assert srv.stats["prefill_unique_lens"] == 2
+        assert srv.stats["prefill_bucket_hits"] == 0
 
 
 class TestSlotIsolation:

@@ -3,8 +3,16 @@ implicit-GEMM conv kernel vs the HBM-materialized im2col path.
 
 CPU wall times (interpret-mode Pallas) are NOT TPU-indicative; the derived
 columns that matter are the analytic VMEM working set, HBM bytes per tile,
-and arithmetic intensity — the quantities the BlockSpec design controls
-(see kernels/binary_matmul.py and kernels/binary_conv.py docstrings).
+MXU row occupancy, per-output weight-unpack work, and arithmetic intensity —
+the quantities the BlockSpec design controls (see kernels/binary_matmul.py
+and kernels/binary_conv.py docstrings).  Every slab/VMEM/occupancy number is
+computed by the kernel module's own exported functions (``slab_rows``,
+``tile_vmem_bytes``, ``pick_tile``, ``mxu_row_occupancy``, ...), so this
+bench cannot drift from the BlockSpec reality.
+
+``run_structured`` returns the same derived metrics as JSON-ready dicts —
+``benchmarks/run.py --json BENCH_kernel.json`` writes them next to the CSV
+so future PRs can diff perf machine-readably.
 """
 from __future__ import annotations
 
@@ -16,6 +24,8 @@ import jax.numpy as jnp
 from repro.core import binarize as bz
 from repro.core import binconv
 from repro.core.binlinear import QuantConfig
+from repro.kernels import binary_conv as bck
+from repro.kernels import binary_dwconv as bdw
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -42,23 +52,24 @@ def tile_stats(bt, bn, bk, M):
 
 
 def conv_tile_stats(H, W, C, kh, kw, D, M, *, stride=1, pool=1, bd=128,
-                    bu=None):
-    """Analytic HBM bytes moved per (image, D-tile, row-tile) kernel program:
-    fused implicit GEMM vs the explicit-im2col path, fp32 activations.
+                    bu=None, nb=1):
+    """Analytic HBM bytes moved per (batch-tile, D-tile, row-tile) kernel
+    program: fused implicit GEMM vs the explicit-im2col path, fp32
+    activations.  Slab geometry comes from ``kernels/binary_conv.slab_rows``
+    — the same function the kernel's BlockSpec uses.
 
-    fused (kernels/binary_conv.py): read the input row-slab (halo rows
-    included) + the bit-packed per-tap weight tile, write the *pooled*
+    fused (kernels/binary_conv.py): read NB images' input row-slabs (halo
+    rows included) + the bit-packed per-tap weight tile, write the *pooled*
     output tile.  The patch tensor lives only in VMEM.  ``bu`` is the row
     tile in pooled output rows; None = whole-image blocking (the BU = Uo
-    special case).
+    special case).  ``nb`` is the batch tile (images folded into the GEMM
+    row dim).
 
     im2col (core/binconv.py conv2d + relu_maxpool): additionally writes the
-    row-tile's [u·V, kh·kw·C] patch slice to HBM and reads it back for the
+    tile's [nb·u·V, kh·kw·C] patch slice to HBM and reads it back for the
     matmul, then writes the unpooled conv output and re-reads it for
     pooling.
     """
-    from repro.kernels import binary_conv as bck
-
     U = (H - kh) // stride + 1
     V = (W - kw) // stride + 1
     bd = min(bd, D)
@@ -66,11 +77,11 @@ def conv_tile_stats(H, W, C, kh, kw, D, M, *, stride=1, pool=1, bd=128,
     bu = uo if bu is None else min(bu, uo)
     u_tile = bu * pool
     slab = bck.slab_rows(bu, kh, stride=stride, pool=pool)
-    x_b = min(slab, H) * W * C * 4
+    x_b = nb * min(slab, H) * W * C * 4
     w_packed = M * kh * kw * ((C + 7) // 8) * bd
-    out_pooled = bu * (V // pool) * bd * 4
-    out_unpooled = u_tile * V * bd * 4
-    patches = u_tile * V * kh * kw * C * 4
+    out_pooled = nb * bu * (V // pool) * bd * 4
+    out_unpooled = nb * u_tile * V * bd * 4
+    patches = nb * u_tile * V * kh * kw * C * 4
     fused = x_b + w_packed + out_pooled
     im2col_path = (x_b + 2 * patches + w_packed
                    + out_unpooled * 2 + out_pooled)
@@ -118,7 +129,8 @@ def conv_rows(quick: bool = False):
 # MobileNet-B2 (alpha=1, rho=1, 224² — the paper's Table III headline row).
 # H/W are the SAME-padded input dims of each layer; stem + the early
 # point-wise layers are exactly where whole-image blocking blows the VMEM
-# budget and the row tiling (kernels/binary_conv.py pick_bu) must engage.
+# budget and the row tiling (kernels/binary_conv.py pick_tile) must engage
+# with NB=1, while the 7² back half is where the batch tile must grow.
 MOBILENET_B2_CASES = [
     ("stem_224", dict(H=225, W=225, C=3, kh=3, kw=3, D=32, M=2, stride=2)),
     ("pw0_112", dict(H=112, W=112, C=32, kh=1, kw=1, D=64, M=2)),
@@ -135,53 +147,141 @@ MOBILENET_B2_DW_CASES = [
     ("dw5_28s2", dict(H=29, W=29, C=256, stride=2)),
 ]
 
+# The MXU-row-occupancy tier: small late-layer maps where one image feeds
+# the 128-row MXU far under capacity, whole-image-per-program vs the
+# batch-tiled pick.  B is the serving batch the pick may fold from (a bulk
+# batch: the pick minimizes the batch's total padded rows, so B matters).
+MXU_OCCUPANCY_CASES = [
+    ("cnn_a_conv2", dict(H=21, W=21, C=5, kh=4, kw=4, D=150, M=2, pool=6,
+                         B=128)),
+    ("mnet_pw11_7", dict(H=7, W=7, C=512, kh=1, kw=1, D=1024, M=2, B=128)),
+    ("mnet_pw12_7", dict(H=7, W=7, C=1024, kh=1, kw=1, D=1024, M=2, B=128)),
+]
+
+
+def conv_case_stats(H, W, C, kh, kw, D, M, *, stride=1, pool=1, B=1,
+                    budget=None):
+    """Everything the bench (and the JSON artifact) reports for one conv
+    layer shape, derived exclusively through the kernel module's exported
+    analytics: the (NB, BU) pick, per-program VMEM bytes, fused vs im2col
+    HBM bytes, MXU row occupancy, and per-output weight-unpack work."""
+    budget = budget or bck.DEFAULT_VMEM_BUDGET
+    bd = min(128, D)
+    U = (H - kh) // stride + 1
+    V = (W - kw) // stride + 1
+    uo = max(U // pool, 1)
+    K = kh * kw * C
+    nb, bu = bck.pick_tile(B, H, W, C, kh, kw, bd, pool, budget,
+                           stride=stride, m=M)
+    vmem_whole = bck.tile_vmem_bytes(W, C, kh, kw, bd, bu=uo, stride=stride,
+                                     pool=pool, m=M)
+    vmem_tiled = bck.tile_vmem_bytes(W, C, kh, kw, bd, bu=bu, stride=stride,
+                                     pool=pool, m=M, nb=nb)
+    fused, im2col_b, hbm_gain = conv_tile_stats(
+        H, W, C, kh, kw, D, M, stride=stride, pool=pool, bd=bd, bu=bu, nb=nb)
+    occ_whole = bck.mxu_row_occupancy(bck.gemm_rows(1, uo, V, pool=pool))
+    occ_picked = bck.mxu_row_occupancy(bck.gemm_rows(nb, bu, V, pool=pool))
+    rows_img = bck.gemm_rows(1, bu, V, pool=pool)
+    util_batch = (bck.batch_row_utilization(B, nb, rows_img)
+                  if bu == uo else occ_picked)
+    return {
+        "B": B, "nb": nb, "bu": bu, "uo": uo, "bd": bd, "K": K,
+        "batch_row_utilization": util_batch,
+        "vmem_whole_bytes": vmem_whole, "vmem_tiled_bytes": vmem_tiled,
+        "vmem_budget_bytes": budget,
+        "hbm_fused_bytes": fused, "hbm_im2col_bytes": im2col_b,
+        "hbm_reduction": hbm_gain,
+        "mxu_row_occupancy_whole": occ_whole,
+        "mxu_row_occupancy_picked": occ_picked,
+        "unpack_per_output_whole": bck.unpack_work_per_output(
+            1, uo, max(V // pool, 1), K, m=M),
+        "unpack_per_output_picked": bck.unpack_work_per_output(
+            nb, bu, max(V // pool, 1), K, m=M),
+    }
+
 
 def mobilenet_b2_rows():
     """MobileNet-B2 (224²) tier: per-tile VMEM working set for whole-image
-    vs picked row-tile blocking, plus fused-vs-im2col HBM bytes under the
-    tiled blocking — the quantities behind the §V Table III scaling claim."""
-    from repro.kernels import binary_conv as bck
-    from repro.kernels import binary_dwconv as bdw
-
+    vs picked (NB, BU) blocking, plus fused-vs-im2col HBM bytes under the
+    picked blocking — the quantities behind the §V Table III scaling claim."""
     budget = bck.DEFAULT_VMEM_BUDGET
     rows = []
     for name, case in MOBILENET_B2_CASES:
-        H, W, C = case["H"], case["W"], case["C"]
-        kh, kw, D, M = case["kh"], case["kw"], case["D"], case["M"]
-        stride = case.get("stride", 1)
-        bd = min(128, D)
-        U = (H - kh) // stride + 1
-        whole = bck.tile_vmem_bytes(W, C, kh, kw, bd, bu=U, stride=stride,
-                                    m=M)
-        bu = bck.pick_bu(H, W, C, kh, kw, bd, 1, budget, stride=stride, m=M)
-        tiled = bck.tile_vmem_bytes(W, C, kh, kw, bd, bu=bu, stride=stride,
-                                    m=M)
-        fused, im2col_b, gain = conv_tile_stats(bd=bd, bu=bu, **case)
+        s = conv_case_stats(B=8, **case)
         rows.append((
             f"conv_vmem_per_tile_mnet_b2_{name}", 0.0,
-            f"bu={bu}/{U} vmem_whole_MB={whole / 2**20:.2f} "
-            f"vmem_tiled_MB={tiled / 2**20:.2f} "
+            f"nb={s['nb']} bu={s['bu']}/{s['uo']} "
+            f"vmem_whole_MB={s['vmem_whole_bytes'] / 2**20:.2f} "
+            f"vmem_tiled_MB={s['vmem_tiled_bytes'] / 2**20:.2f} "
             f"budget_MB={budget / 2**20:.0f} "
-            f"fused_KB={fused / 1024:.1f} im2col_KB={im2col_b / 1024:.1f} "
-            f"hbm_reduction={gain:.1f}x"))
+            f"fused_KB={s['hbm_fused_bytes'] / 1024:.1f} "
+            f"im2col_KB={s['hbm_im2col_bytes'] / 1024:.1f} "
+            f"hbm_reduction={s['hbm_reduction']:.1f}x"))
     for name, case in MOBILENET_B2_DW_CASES:
         H, W, C, stride = case["H"], case["W"], case["C"], case["stride"]
         M = 2
         U = (H - 3) // stride + 1
         whole = bdw.tile_vmem_bytes_dw(W, C, 3, 3, bu=U, stride=stride, m=M)
-        bu = bdw.pick_bu_dw(H, W, C, 3, 3, budget, stride=stride, m=M)
-        tiled = bdw.tile_vmem_bytes_dw(W, C, 3, 3, bu=bu, stride=stride, m=M)
+        nb, bu = bdw.pick_tile_dw(8, H, W, C, 3, 3, budget, stride=stride,
+                                  m=M)
+        tiled = bdw.tile_vmem_bytes_dw(W, C, 3, 3, bu=bu, stride=stride, m=M,
+                                       nb=nb)
         c8 = -(-C // 8)
         # binary vs fp32 dw weight stream per image (the dw memory-bound win)
         w_bits = M * 9 * c8 + M * C * 4
         w_fp = 9 * C * 4
         rows.append((
             f"dwconv_vmem_per_tile_mnet_b2_{name}", 0.0,
-            f"bu={bu}/{U} vmem_whole_MB={whole / 2**20:.2f} "
+            f"nb={nb} bu={bu}/{U} vmem_whole_MB={whole / 2**20:.2f} "
             f"vmem_tiled_MB={tiled / 2**20:.2f} "
             f"budget_MB={budget / 2**20:.0f} "
             f"w_packed_B={w_bits} w_fp32_B={w_fp}"))
     return rows
+
+
+def mxu_occupancy_rows():
+    """Whole-image-per-program vs batch-tiled rows for the small back-half
+    maps: MXU row occupancy and per-output weight-unpack work, the two
+    quantities the (NB, BU) batch tile exists to fix."""
+    rows = []
+    for name, case in MXU_OCCUPANCY_CASES:
+        s = conv_case_stats(**case)
+        rows.append((
+            f"conv_mxu_occupancy_{name}", 0.0,
+            f"nb={s['nb']} bu={s['bu']}/{s['uo']} B={s['B']} "
+            f"occ_whole={s['mxu_row_occupancy_whole']:.2f} "
+            f"occ_batched={s['mxu_row_occupancy_picked']:.2f} "
+            f"util_batch={s['batch_row_utilization']:.2f} "
+            f"unpack_per_out_whole={s['unpack_per_output_whole']:.1f} "
+            f"unpack_per_out_batched={s['unpack_per_output_picked']:.1f} "
+            f"vmem_tiled_MB={s['vmem_tiled_bytes'] / 2**20:.2f}"))
+    return rows
+
+
+def run_structured(quick: bool = False):
+    """Machine-readable derived metrics (no wall times — those are CPU
+    interpret-mode noise).  Consumed by ``benchmarks/run.py --json``."""
+    out = []
+    for name, case in MOBILENET_B2_CASES:
+        out.append({"name": f"conv_mnet_b2_{name}", "kind": "conv_tile",
+                    **conv_case_stats(B=8, **case)})
+    for name, case in MXU_OCCUPANCY_CASES:
+        out.append({"name": f"conv_mxu_occupancy_{name}",
+                    "kind": "mxu_occupancy", **conv_case_stats(**case)})
+    for name, case in CONV_CASES:
+        fused, im2col_b, gain = conv_tile_stats(**case)
+        out.append({"name": f"conv_hbm_{name}", "kind": "hbm_per_tile",
+                    "hbm_fused_bytes": fused, "hbm_im2col_bytes": im2col_b,
+                    "hbm_reduction": gain})
+    for name, case in MOBILENET_B2_DW_CASES:
+        H, W, C, stride = case["H"], case["W"], case["C"], case["stride"]
+        nb, bu = bdw.pick_tile_dw(8, H, W, C, 3, 3, stride=stride, m=2)
+        out.append({
+            "name": f"dwconv_mnet_b2_{name}", "kind": "dw_tile",
+            "nb": nb, "bu": bu,
+            "vmem_tiled_bytes": bdw.tile_vmem_bytes_dw(
+                W, C, 3, 3, bu=bu, stride=stride, m=2, nb=nb)})
+    return out
 
 
 def run(quick: bool = False):
@@ -214,6 +314,7 @@ def run(quick: bool = False):
             f"AI_bf16={ai_d:.0f} gain={ai_p / ai_d:.1f}x"))
     rows.extend(conv_rows(quick))
     rows.extend(mobilenet_b2_rows())
+    rows.extend(mxu_occupancy_rows())
     return rows
 
 

@@ -1,11 +1,21 @@
 """Benchmark driver: one module per paper table + kernel + roofline.
 
-Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  With
+``--json PATH`` it additionally writes the machine-readable perf trajectory:
+every selected module that exports ``run_structured(quick)`` contributes
+JSON-ready dicts of its *derived* metrics (VMEM/HBM bytes, MXU occupancy,
+tile picks, device-call counts — no CPU wall times, which are noise), plus
+the CSV rows themselves, so future PRs can diff perf without parsing the
+human-oriented derived strings.  CI uploads ``BENCH_kernel.json`` next to
+the CSV artifact (.github/workflows/ci.yml).
+
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table2,...]
+                                                [--json BENCH_kernel.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -24,11 +34,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write derived metrics as JSON "
+                         "(e.g. BENCH_kernel.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
     failed = 0
+    doc: dict = {"quick": args.quick, "modules": {}}
     for key, modname in MODULES:
         if only and key not in only:
             continue
@@ -37,13 +51,31 @@ def main() -> None:
             import importlib
 
             mod = importlib.import_module(modname)
+            csv_rows = []
             for name, secs, derived in mod.run(quick=args.quick):
                 print(f"{name},{secs * 1e6:.0f},{derived}")
+                csv_rows.append({"name": name, "us_per_call": secs * 1e6,
+                                 "derived": derived})
+            entry: dict = {"csv_rows": csv_rows}
+            doc["modules"][key] = entry  # csv_rows survive a structured fail
+            if hasattr(mod, "run_structured"):
+                try:
+                    entry["structured"] = mod.run_structured(quick=args.quick)
+                except Exception as e:  # noqa: BLE001
+                    failed += 1
+                    entry["structured_error"] = f"{type(e).__name__}: {e}"
+                    print(f"{key}_structured_FAILED,0,{type(e).__name__}: {e}")
+                    traceback.print_exc(file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             failed += 1
             print(f"{key}_FAILED,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+            doc["modules"][key] = {"error": f"{type(e).__name__}: {e}"}
         print(f"{key}_total,{(time.time() - t0) * 1e6:.0f},", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"json_written,0,{args.json}", file=sys.stderr)
     sys.exit(1 if failed else 0)
 
 

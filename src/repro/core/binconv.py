@@ -163,6 +163,17 @@ def binarize_dwconv_params(params: dict, quant: QuantConfig) -> dict:
 _warned_legacy_repack = False
 
 
+def _reset_warnings() -> None:
+    """Re-arm the module's warn-once flags (test hook).
+
+    The legacy-repack warning fires once per process; a test that triggers
+    it would otherwise poison every later test's expectation of seeing (or
+    not seeing) the warning.  tests/conftest.py calls this around each test.
+    """
+    global _warned_legacy_repack
+    _warned_legacy_repack = False
+
+
 def ensure_tap_packed(params: dict, C: int) -> dict:
     """One-time weight-layout upgrade for legacy packed conv trees.
 
@@ -241,6 +252,8 @@ def conv2d_relu_pool(params: dict, x: jax.Array, *, stride: int = 1,
             y = kops.binary_conv2d(
                 x, tap, params["alpha"], bias, kh=kh, kw=kw, stride=stride,
                 padding=padding, pool=pool, m_active=quant.m_active,
+                nb=quant.conv_batch_tile,
+                vmem_budget=quant.conv_vmem_budget,
                 interpret=quant.interpret)
             return y.astype(x.dtype)
     y = conv2d(params, x, stride=stride, padding=padding, quant=quant)
@@ -288,7 +301,9 @@ def depthwise_relu(params: dict, x: jax.Array, *, stride: int = 1,
             y = kops.binary_dwconv2d(
                 x, params["B_tap_packed"], params["alpha"], bias,
                 kh=kh, kw=kw, stride=stride, padding="SAME",
-                m_active=quant.m_active, interpret=quant.interpret)
+                m_active=quant.m_active, nb=quant.conv_batch_tile,
+                vmem_budget=quant.conv_vmem_budget,
+                interpret=quant.interpret)
         else:
             from repro.kernels import ref as kref
 

@@ -38,6 +38,12 @@ class QuantConfig:
     fuse_conv: bool = False         # binary convs: fused implicit-GEMM kernel
                                     # (patches in VMEM, AMU epilogue) instead
                                     # of HBM im2col + matmul; needs use_pallas
+    conv_batch_tile: int | None = None   # fused conv kernels: images folded
+                                    # per program (NB); None = auto pick_tile
+                                    # co-pick with the row tile
+    conv_vmem_budget: int | None = None  # per-program VMEM budget override
+                                    # for the (NB, BU) pick (bytes; None =
+                                    # kernels' DEFAULT_VMEM_BUDGET)
 
     def replace(self, **kw: Any) -> "QuantConfig":
         return dataclasses.replace(self, **kw)

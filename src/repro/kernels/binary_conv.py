@@ -9,9 +9,9 @@ here the kernel does the same job in VMEM:
   1. AGU:  extract the patch tile for one input row-slab directly from the
      input block with kh·kw static strided slices — the im2col tensor only
      ever exists as a VMEM value, never in HBM.
-  2. PE/PA: per level m, unpack the bit-packed filters to ±1, fold the
-     per-(level, group) alpha in per K row, and run one MXU matmul
-     (the same per-level compute order as binary_matmul.py).
+  2. PE/PA: unpack the bit-packed filters of all active levels to ±1, fold
+     the per-(level, group) alpha in per K row, and run ONE level-concatenated
+     MXU contraction ``[rows, m·K] @ [m·K, bd]`` (see below).
   3. AMU:  bias + 2D max-pool + ReLU epilogue (paper Eq. 13, pool then ReLU
      == ReLU then pool by commutativity) before the HBM write-back, so the
      output stream is already pooled (pool² fewer bytes).
@@ -38,16 +38,47 @@ and ``binconv.binarize_conv_params`` emits it directly — the tests' jnp
 oracle (kernels/ref.py) consumes the *flat* layout, which is what keeps the
 two packings cross-checked.
 
-VMEM blocking: (batch, D-tile, U row-tile) grid with halo slabs
----------------------------------------------------------------
-Grid: ``(B, D/BD, ceil(Uo/BU))`` where ``Uo = U // pool`` is the pooled
-output height.  One program computes a ``BU × Vo × BD`` pooled output tile
-(``Vo = V // pool``; the V axis is never tiled — feature maps are at most a
-few hundred columns wide, and the MXU wants the full ``u_tile·V`` row
+Level-concatenated GEMM (one MXU contraction per program)
+---------------------------------------------------------
+The paper's Eq. 8 sum ``y = Σ_m alpha_m ⊙ (patches @ B_m)`` is linear in
+the per-level products, so the kernel folds alpha into each level's ±1 tile
+and stacks the levels along the contraction axis:
+
+    W_cat [m·K, bd]   = concat_m (B_m ⊙ alpha_m)      (level-major rows)
+    P_cat [rows, m·K] = concat_m patches              (m copies, VMEM-only)
+    acc              = P_cat @ W_cat                  (one dot_general)
+
+Each program issues a single big MXU contraction instead of m small ones:
+the bit-unpack + alpha-fold runs once per program (not once per level-matmul
+pipeline stage) and the MXU sees an m× longer reduction, which matters
+exactly on the small late-layer feature maps where ``rows`` is short.
+(The fully-collapsed alternative — pre-summing the alpha-folded levels into
+one fp W_hat [K, bd] like the dw kernel's ``eff`` tap fold — would halve
+the per-program MACs and drop the P_cat copy, but gives up the per-level
+product structure of the paper's Eq. 8 inside the contraction; the
+level-concat layout keeps each alpha_m·B_m product an explicit row block
+of the GEMM while still amortizing the unpack.  ``tile_vmem_bytes``
+charges the P_cat copy, so the (NB, BU) pick already accounts for it.)
+
+VMEM blocking: (batch-tile, D-tile, U row-tile) grid with halo slabs
+--------------------------------------------------------------------
+Grid: ``(ceil(B/NB), D/BD, ceil(Uo/BU))`` where ``Uo = U // pool`` is the
+pooled output height.  One program computes a ``NB × BU × Vo × BD`` pooled
+output tile (``Vo = V // pool``; the V axis is never tiled — feature maps
+are at most a few hundred columns wide, and the MXU wants the full row
 dimension anyway).  D is tiled MXU-style (BD = 128 by default, shrunk for
 small D).
 
-The input block for row-tile ``t`` is a **slab** of
+**NB — batch tile.**  NB images are folded into the implicit-GEMM row
+dimension: the patch tile becomes ``[NB·u_tile·V, K]`` so the MXU row dim
+sees NB·u_tile·V rows instead of u_tile·V.  A 7×7 point-wise layer alone
+feeds the 128-row MXU only 49 rows (38% row occupancy) and re-runs the
+weight unpack for every one of the B·nt programs that share a weight tile;
+folding NB images amortizes the unpack NB× and lets NB·49 approach a
+multiple of 128 (NB=5 → 245/256 = 96% occupancy).  Ragged batches
+(B % NB != 0) ride on zero-padded images sliced off after the call.
+
+**BU — row tile.**  The input block for row-tile ``t`` is a **slab** of
 
     slab_rows = (BU·pool − 1)·stride + kh            rows, starting at
     row0      = t · BU·pool·stride                   (element offset)
@@ -62,25 +93,31 @@ the row axis so every slab (including the ragged last tile when
 ``Uo % BU != 0``) is fully in bounds; the zero rows only ever feed output
 rows that are sliced off after the call.
 
-alpha/bias/weights are broadcast along the batch and row-tile grid dims,
-x along the D grid dim; the row-tile dim is innermost so a weight tile
-stays resident while the x slabs stream through it.  Per-program working
-set (``tile_vmem_bytes`` computes the same quantities):
+alpha/bias/weights are broadcast along the batch-tile and row-tile grid
+dims, x along the D grid dim; the row-tile dim is innermost so a weight
+tile stays resident while the x slabs stream through it.  Per-program
+working set (``tile_vmem_bytes`` computes the same quantities):
 
-    x slab        slab_rows·Wp·C·4              (fp32 input rows + halo)
-    patches       BU·pool·V·kh·kw·C·4           (implicit im2col, VMEM-only)
-    weight tile   M·kh·kw·ceil(C/8)·BD          (bit-packed)
-    w (1 level)   kh·kw·ceil(C/8)·8·BD·4        (unpacked ±1 as fp32)
-    acc           BU·pool·V·BD·4
-    out tile      BU·Vo·BD·4                    (pooled HBM write)
+    x slab        NB·slab_rows·Wp·C·4            (fp32 input rows + halo)
+    patches       NB·u_tile·V·kh·kw·C·4·cat      (implicit im2col; cat = m+1
+                                                  counts the level-concat
+                                                  copy P_cat when m > 1)
+    weight tile   M·kh·kw·ceil(C/8)·BD           (bit-packed)
+    W_cat         2·m·kh·kw·C·BD·4               (±1 unpack + alpha-folded)
+    acc           NB·u_tile·V·BD·4
+    out tile      NB·BU·Vo·BD·4                  (pooled HBM write)
 
-``pick_bu`` chooses the largest BU whose working set fits a VMEM budget
-(default ``DEFAULT_VMEM_BUDGET`` = 8 MiB, half a TPU core's VMEM, leaving
-room for double buffering); whole-image blocking is recovered as the
-``BU == Uo`` special case and remains the pick whenever the image fits —
-CNN-A never tiles, MobileNet-224's stem and early point-wise layers do.
-``benchmarks/kernel_bench.py`` prints the analytic per-tile VMEM bytes and
-HBM bytes for the fused vs explicit-im2col paths from these quantities.
+``pick_tile`` co-picks (NB, BU) from a VMEM budget (default
+``DEFAULT_VMEM_BUDGET`` = 8 MiB, half a TPU core's VMEM, leaving room for
+double buffering): big early layers keep NB=1 and row-tile BU down until
+the slab fits; small late layers keep whole-image BU = Uo and pick the NB
+minimizing the whole batch's padded MXU rows (ragged-batch zero images
+charged) within the budget.  ``pick_bu`` is the BU-only special case (NB
+fixed).  Whole-image per-image blocking is
+recovered as NB=1, BU=Uo and remains bit-exact with every other tiling.
+``benchmarks/kernel_bench.py`` prints the analytic per-tile VMEM bytes, HBM
+bytes, and MXU row occupancy for the paper's layer shapes from these
+quantities.
 """
 from __future__ import annotations
 
@@ -92,9 +129,13 @@ from jax.experimental import pallas as pl
 
 from repro.core import binarize as bz
 
-# Per-program VMEM working-set budget for auto-picked row tiles: half a TPU
+# Per-program VMEM working-set budget for auto-picked tiles: half a TPU
 # core's ~16 MiB VMEM, leaving headroom for the pipeline's double buffering.
 DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+# MXU systolic-array row dimension: the GEMM row count a program feeds is
+# padded to a multiple of this, so occupancy = rows / roundup(rows, 128).
+MXU_ROWS = 128
 
 
 def pack_taps(B: jax.Array, kh: int, kw: int, C: int) -> jax.Array:
@@ -131,7 +172,7 @@ def repack_taps(B_packed: jax.Array, kh: int, kw: int, C: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Row-tile sizing (VMEM budget -> BU)
+# Tile sizing (VMEM budget -> (NB, BU)) and MXU-occupancy analytics
 # ---------------------------------------------------------------------------
 
 def slab_rows(bu: int, kh: int, *, stride: int = 1, pool: int = 1) -> int:
@@ -139,32 +180,76 @@ def slab_rows(bu: int, kh: int, *, stride: int = 1, pool: int = 1) -> int:
     return (bu * pool - 1) * stride + kh
 
 
+def gemm_rows(nb: int, bu: int, V: int, *, pool: int = 1) -> int:
+    """GEMM row count one program feeds the MXU: NB images × BU·pool conv
+    rows × V conv columns."""
+    return nb * bu * pool * V
+
+
+def mxu_row_occupancy(rows: int) -> float:
+    """Fraction of the MXU's padded row dimension carrying real work:
+    rows / roundup(rows, MXU_ROWS)."""
+    return rows / (-(-rows // MXU_ROWS) * MXU_ROWS)
+
+
+def batch_padded_rows(B: int, nb: int, rows_img: int) -> int:
+    """Total MXU rows a whole batch moves (zero-padding included): each of
+    the ceil(B/nb) programs pads its nb·rows_img GEMM rows (the ragged last
+    program's missing images ride as zero rows) up to a multiple of
+    MXU_ROWS."""
+    progs = -(-B // nb)
+    return progs * (-(-nb * rows_img // MXU_ROWS) * MXU_ROWS)
+
+
+def batch_row_utilization(B: int, nb: int, rows_img: int) -> float:
+    """End-to-end fraction of the batch's padded MXU rows carrying real
+    work: B·rows_img / batch_padded_rows — unlike the per-program
+    ``mxu_row_occupancy`` this also charges the ragged-batch zero images."""
+    return B * rows_img / batch_padded_rows(B, nb, rows_img)
+
+
+def unpack_work_per_output(nb: int, bu: int, vo: int, K: int, *,
+                           m: int = 1) -> float:
+    """Weight-unpack element ops per pooled output element of one program.
+
+    A program unpacks ``m·K·bd`` weight elements once and produces
+    ``nb·bu·vo·bd`` pooled outputs, so folding NB images divides the
+    per-output unpack work by NB — the amortization the batch tile buys.
+    """
+    return m * K / (nb * bu * max(vo, 1))
+
+
 def tile_vmem_bytes(W: int, C: int, kh: int, kw: int, bd: int, *, bu: int,
-                    pool: int = 1, stride: int = 1, m: int = 1) -> int:
-    """Analytic per-program VMEM working set of the fused conv kernel for a
-    ``bu``-pooled-row output tile (see the module docstring's table).
+                    pool: int = 1, stride: int = 1, m: int = 1,
+                    nb: int = 1) -> int:
+    """Analytic per-program VMEM working set of the fused conv kernel for an
+    ``nb``-image, ``bu``-pooled-row output tile (see the module docstring's
+    table).
 
     ``W`` is the *padded* input width (SAME resolved upstream).  The same
-    numbers drive ``pick_bu`` and benchmarks/kernel_bench.py.
+    numbers drive ``pick_tile``/``pick_bu`` and benchmarks/kernel_bench.py.
     """
     V = (W - kw) // stride + 1
     u_tile = bu * pool
     slab = slab_rows(bu, kh, stride=stride, pool=pool)
     c8 = -(-C // 8)
-    x_b = slab * W * C * 4
-    patches = u_tile * V * kh * kw * C * 4
+    K = kh * kw * C
+    x_b = nb * slab * W * C * 4
+    # base patches + the level-concatenated P_cat copy (m > 1 only)
+    cat = 1 + (m if m > 1 else 0)
+    patches = nb * u_tile * V * K * 4 * cat
     w_packed = m * kh * kw * c8 * bd
-    w_level = kh * kw * c8 * 8 * bd * 4      # one level's ±1 tile as fp32
-    acc = u_tile * V * bd * 4
-    out = bu * max(V // pool, 1) * bd * 4
-    return x_b + patches + w_packed + w_level + acc + out
+    w_cat = 2 * m * K * bd * 4               # ±1 unpack + alpha-folded W_cat
+    acc = nb * u_tile * V * bd * 4
+    out = nb * bu * max(V // pool, 1) * bd * 4
+    return x_b + patches + w_packed + w_cat + acc + out
 
 
 def pick_bu(H: int, W: int, C: int, kh: int, kw: int, bd: int,
             pool: int = 1, budget_bytes: int = DEFAULT_VMEM_BUDGET, *,
-            stride: int = 1, m: int = 1) -> int:
+            stride: int = 1, m: int = 1, nb: int = 1) -> int:
     """Largest row-tile BU (pooled output rows per program) whose VMEM
-    working set fits ``budget_bytes``.
+    working set fits ``budget_bytes`` at a fixed batch tile ``nb``.
 
     ``H``/``W`` are the *padded* input dims.  Returns ``Uo = U // pool``
     (whole-image blocking) whenever the image fits the budget, else the
@@ -176,9 +261,53 @@ def pick_bu(H: int, W: int, C: int, kh: int, kw: int, bd: int,
     uo = max(U // pool, 1)
     for bu in range(uo, 1, -1):
         if tile_vmem_bytes(W, C, kh, kw, bd, bu=bu, pool=pool, stride=stride,
-                           m=m) <= budget_bytes:
+                           m=m, nb=nb) <= budget_bytes:
             return bu
     return 1
+
+
+def pick_tile(B: int, H: int, W: int, C: int, kh: int, kw: int, bd: int,
+              pool: int = 1, budget_bytes: int = DEFAULT_VMEM_BUDGET, *,
+              stride: int = 1, m: int = 1) -> tuple[int, int]:
+    """Co-pick the (NB, BU) tile for the fused conv kernel.
+
+    Two regimes, split by whether one whole image fits the budget:
+
+      * big early layers (``pick_bu`` returns BU < Uo): the row slab already
+        saturates the MXU row dim and VMEM is the binding constraint —
+        keep NB=1 and row-tile.
+      * small late layers (whole image fits): keep BU = Uo and pick the NB
+        that minimizes the *whole batch's* padded MXU rows
+        (``batch_padded_rows``: ceil(B/NB) programs, each rounded up to a
+        multiple of MXU_ROWS — so ragged-batch zero images and per-program
+        pad rows are both charged), tie-broken toward fewer programs (the
+        weight unpack runs once per program).  A 7×7 point-wise map is 49
+        rows/image (38% occupancy alone); at B=128 the pick lands on NB=13
+        (637/640 rows = 99.5% per program), while a batch of exactly 16
+        folds all 16 images into one 784-row program rather than leave a
+        mostly-empty ragged program behind.
+
+    Candidate NBs stop at the VMEM budget (or 64 images).  Every (NB, BU)
+    produces bit-identical outputs — tiling is a throughput decision, never
+    an accuracy one.
+    """
+    U = (H - kh) // stride + 1
+    V = (W - kw) // stride + 1
+    uo = max(U // pool, 1)
+    bu = pick_bu(H, W, C, kh, kw, bd, pool, budget_bytes, stride=stride, m=m)
+    if bu < uo or B <= 1:
+        return 1, bu
+    rows1 = gemm_rows(1, uo, V, pool=pool)
+    best_nb, best_key = 1, None
+    for nb in range(1, min(B, 64) + 1):
+        if nb > 1 and tile_vmem_bytes(W, C, kh, kw, bd, bu=uo, pool=pool,
+                                      stride=stride, m=m,
+                                      nb=nb) > budget_bytes:
+            break
+        key = (batch_padded_rows(B, nb, rows1), -(-B // nb))
+        if best_key is None or key < best_key:
+            best_nb, best_key = nb, key
+    return best_nb, uo
 
 
 # ---------------------------------------------------------------------------
@@ -186,53 +315,70 @@ def pick_bu(H: int, W: int, C: int, kh: int, kw: int, bd: int,
 # ---------------------------------------------------------------------------
 
 def _kernel(x_ref, bp_ref, alpha_ref, bias_ref, o_ref, *,
-            kh: int, kw: int, C: int, stride: int, pool: int,
+            kh: int, kw: int, C: int, stride: int, pool: int, nb: int,
             u_tile: int, V: int, group_size: int, m_active: int, relu: bool):
-    """One (image, BD channels, BU rows) tile: patches + matmuls + epilogue."""
-    x = x_ref[0]                                     # [slab_rows, Wp, C]
+    """One (NB images, BD channels, BU rows) tile: patches + GEMM + epilogue."""
+    x = x_ref[...]                                   # [nb, slab_rows, Wp, C]
     # --- AGU: implicit im2col, tap-major to match the K layout (i, j, c) ---
     cols = []
     for i in range(kh):
         for j in range(kw):
-            xs = x[i: i + (u_tile - 1) * stride + 1: stride,
+            xs = x[:, i: i + (u_tile - 1) * stride + 1: stride,
                    j: j + (V - 1) * stride + 1: stride, :]
-            cols.append(xs.reshape(u_tile * V, C))
-    patches = jnp.concatenate(cols, axis=1).astype(jnp.float32)  # [uV, K]
+            cols.append(xs.reshape(nb * u_tile * V, C))
+    patches = jnp.concatenate(cols, axis=1).astype(jnp.float32)  # [rows, K]
 
     K = kh * kw * C
     G = K // group_size
     bd = o_ref.shape[-1]
     c8 = bp_ref.shape[2]
-    shifts = jax.lax.broadcasted_iota(jnp.uint8, (kh * kw, c8, 8, 1), 2)
-    acc = jnp.zeros((u_tile * V, bd), jnp.float32)
-    for m in range(m_active):                        # static unroll over levels
-        packed = bp_ref[m]                           # [kh*kw, C8, bd] uint8
-        bits = (packed[:, :, None, :] >> shifts) & jnp.uint8(1)
-        w = (bits.astype(jnp.int8) * 2 - 1).reshape(kh * kw, c8 * 8, bd)
-        w = w[:, :C, :].reshape(K, bd).astype(jnp.float32)
-        a = alpha_ref[m]                             # [G, bd]
-        a_exp = jnp.broadcast_to(
-            a[:, None, :], (G, group_size, bd)).reshape(K, bd)
-        acc = acc + jax.lax.dot_general(
-            patches, w * a_exp,
+    # --- PA: unpack every active level at once, fold alpha per level-row ---
+    shifts = jax.lax.broadcasted_iota(
+        jnp.uint8, (m_active, kh * kw, c8, 8, 1), 3)
+    bits = (bp_ref[...][:, :, :, None, :] >> shifts) & jnp.uint8(1)
+    w = (bits.astype(jnp.int8) * 2 - 1).reshape(m_active, kh * kw, c8 * 8, bd)
+    w = w[:, :, :C, :].reshape(m_active, K, bd).astype(jnp.float32)
+    a = alpha_ref[...]                               # [m, G, bd]
+    a_exp = jnp.broadcast_to(
+        a[:, :, None, :], (m_active, G, group_size, bd)).reshape(
+        m_active, K, bd)
+    w_cat = (w * a_exp).reshape(m_active * K, bd)    # level-major row blocks
+    p_cat = (jnp.concatenate([patches] * m_active, axis=1)
+             if m_active > 1 else patches)           # [rows, m·K]
+    # One contraction per program, issued in fixed MXU-row-sized passes:
+    # every pass is an identical-shape [MXU_ROWS, m·K] @ [m·K, bd] dot (zero
+    # row padding on the ragged last pass), so each output row's reduction
+    # order is invariant to the (NB, BU) tiling — the bit-exactness
+    # guarantee — and matches how the MXU consumes the row dimension.  A
+    # single [rows, m·K] dot would let the backend re-block the reduction
+    # as a function of the row count, which differs across tilings.
+    rows = nb * u_tile * V
+    r_pad = (-rows) % MXU_ROWS
+    if r_pad:
+        p_cat = jnp.concatenate(
+            [p_cat, jnp.zeros((r_pad, m_active * K), jnp.float32)], axis=0)
+    acc = jax.lax.map(
+        lambda pc: jax.lax.dot_general(
+            pc, w_cat,
             dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
+            preferred_element_type=jnp.float32),
+        p_cat.reshape((rows + r_pad) // MXU_ROWS, MXU_ROWS, m_active * K),
+    ).reshape(rows + r_pad, bd)[:rows]
     # --- AMU epilogue: bias + 2D max-pool + ReLU, then the only HBM write ---
     y = acc + bias_ref[0][None, :]
-    y = y.reshape(u_tile, V, bd)
+    y = y.reshape(nb, u_tile, V, bd)
     if pool > 1:
-        y = y.reshape(u_tile // pool, pool, V // pool, pool, bd).max(
-            axis=(1, 3))
+        y = y.reshape(nb, u_tile // pool, pool, V // pool, pool, bd).max(
+            axis=(2, 4))
     if relu:
         y = jnp.maximum(y, 0.0)
-    o_ref[0] = y
+    o_ref[...] = y
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("kh", "kw", "stride", "pool", "group_size",
-                     "m_active", "relu", "bd", "bu", "vmem_budget",
+                     "m_active", "relu", "bd", "bu", "nb", "vmem_budget",
                      "interpret"),
 )
 def binary_conv2d_pallas(
@@ -250,6 +396,7 @@ def binary_conv2d_pallas(
     relu: bool = True,
     bd: int = 128,
     bu: int | None = None,
+    nb: int | None = None,
     vmem_budget: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -263,12 +410,14 @@ def binary_conv2d_pallas(
                   U = (Hp-kh)//stride + 1, V = (Wp-kw)//stride + 1.
 
     U and V must be divisible by ``pool`` (downsampling-only pooling, paper
-    §III-B — binconv.relu_maxpool asserts the same).  ``bu`` fixes the row
-    tile (pooled output rows per program); None auto-picks it from
-    ``vmem_budget`` (default 8 MiB) via :func:`pick_bu` — whole-image
-    blocking whenever the image fits.  Tiled and whole-image blocking are
-    bit-identical: each output element's K-reduction and level order are
-    the same in every tiling.
+    §III-B — binconv.relu_maxpool asserts the same).  ``nb`` fixes the batch
+    tile (images folded into the GEMM row dim per program) and ``bu`` the
+    row tile (pooled output rows per program); leaving both None co-picks
+    them from ``vmem_budget`` (default 8 MiB) via :func:`pick_tile` —
+    whole-image NB=1 blocking whenever that already saturates the MXU.
+    Giving ``bu`` alone keeps per-image blocking (nb=1).  Every (nb, bu)
+    tiling is bit-identical: each output element's concatenated m·K
+    reduction is the same in every tiling.
     """
     B, Hp, Wp, C = x.shape
     M, T, C8, D = B_tap_packed.shape
@@ -289,19 +438,28 @@ def binary_conv2d_pallas(
         bias = jnp.pad(bias, ((0, d_rem),))
     Dp = D + d_rem
 
-    # --- row tiling: BU pooled output rows per program, halo slab input ---
+    # --- joint (NB, BU) tiling: batch fold + halo row slabs ---
     uo = U // pool
-    if bu is None:
-        bu = pick_bu(Hp, Wp, C, kh, kw, bd, pool,
-                     vmem_budget or DEFAULT_VMEM_BUDGET,
-                     stride=stride, m=m_active)
+    budget = vmem_budget or DEFAULT_VMEM_BUDGET
+    if nb is None and bu is None:
+        nb, bu = pick_tile(B, Hp, Wp, C, kh, kw, bd, pool, budget,
+                           stride=stride, m=m_active)
+    elif nb is None:
+        nb = 1  # explicit BU: per-image row tiling (the pre-batch semantics)
+    elif bu is None:
+        bu = pick_bu(Hp, Wp, C, kh, kw, bd, pool, budget,
+                     stride=stride, m=m_active, nb=max(1, min(nb, B)))
+    nb = max(1, min(nb, B))
     bu = max(1, min(bu, uo))
     nt = -(-uo // bu)                       # row tiles (last may be ragged)
     adv = bu * pool * stride                # slab start advance per tile
     slab = slab_rows(bu, kh, stride=stride, pool=pool)
     rows_needed = (nt - 1) * adv + slab     # last slab's end, incl. halo
-    if rows_needed > Hp:  # ragged last tile / halo: zero rows, sliced off
-        x = jnp.pad(x, ((0, 0), (0, rows_needed - Hp), (0, 0), (0, 0)))
+    b_rem = (-B) % nb                       # ragged batch: zero images,
+    row_pad = max(rows_needed - Hp, 0)      # ragged rows: zero rows — both
+    if b_rem or row_pad:                    # sliced off after the call
+        x = jnp.pad(x, ((0, b_rem), (0, row_pad), (0, 0), (0, 0)))
+    Bp = B + b_rem
     u_tile = bu * pool
 
     B_tap_packed = B_tap_packed[:m_active]
@@ -310,26 +468,26 @@ def binary_conv2d_pallas(
 
     # row-tile dim innermost: the weight tile stays resident per D-tile
     # while the x slabs stream through it.
-    grid = (B, Dp // bd, nt)
+    grid = (Bp // nb, Dp // bd, nt)
     out = pl.pallas_call(
         functools.partial(
-            _kernel, kh=kh, kw=kw, C=C, stride=stride, pool=pool,
+            _kernel, kh=kh, kw=kw, C=C, stride=stride, pool=pool, nb=nb,
             u_tile=u_tile, V=V, group_size=group_size, m_active=m_active,
             relu=relu),
         grid=grid,
         in_specs=[
             # overlapping halo slabs need element offsets -> Unblocked
-            pl.BlockSpec((1, slab, Wp, C),
-                         lambda b, d, t: (b, t * adv, 0, 0),
+            pl.BlockSpec((nb, slab, Wp, C),
+                         lambda b, d, t: (b * nb, t * adv, 0, 0),
                          indexing_mode=pl.Unblocked()),
             pl.BlockSpec((m_active, T, C8, bd), lambda b, d, t: (0, 0, 0, d)),
             pl.BlockSpec((m_active, G, bd), lambda b, d, t: (0, 0, d)),
             pl.BlockSpec((1, bd), lambda b, d, t: (0, d)),
         ],
-        out_specs=pl.BlockSpec((1, bu, V // pool, bd),
+        out_specs=pl.BlockSpec((nb, bu, V // pool, bd),
                                lambda b, d, t: (b, t, 0, d)),
-        out_shape=jax.ShapeDtypeStruct((B, nt * bu, V // pool, Dp),
+        out_shape=jax.ShapeDtypeStruct((Bp, nt * bu, V // pool, Dp),
                                        jnp.float32),
         interpret=interpret,
     )(x, B_tap_packed, alpha, bias2)
-    return out[:, :uo, :, :D]
+    return out[:B, :uo, :, :D]

@@ -34,14 +34,21 @@ which is what keeps the packing and the kernel cross-checked.
 
 VMEM blocking
 -------------
-Grid: ``(B, ceil(U/BU))`` — row tiles only; the channel axis stays whole
-(dw feature maps are large exactly when C is small, and C·4 bytes per pixel
-is the whole working set — there is no D blow-up).  Row tiles use the same
-halo-slab scheme as kernels/binary_conv.py: tile ``t`` reads the input rows
+Grid: ``(ceil(B/NB), ceil(U/BU))`` — joint (batch-tile, row-tile) blocking
+like kernels/binary_conv.py; the channel axis stays whole (dw feature maps
+are large exactly when C is small, and C·4 bytes per pixel is the whole
+working set — there is no D blow-up).  NB images per program amortize the
+per-program bit-unpack + alpha-fold NB× (there is no MXU row dimension to
+fill here — the tap accumulation runs on the VPU — so the batch tile is
+purely an unpack/dispatch amortization; ragged batches ride on zero-padded
+images sliced off after the call).  Row tiles use the same halo-slab scheme
+as the conv kernel: tile ``t`` reads the input rows
 ``[t·BU·stride, t·BU·stride + (BU-1)·stride + kh)`` via a ``pl.Unblocked``
 element-offset index map, with the wrapper zero-padding the row axis so
-ragged last tiles stay in bounds.  ``pick_bu_dw`` sizes BU from the same
-8 MiB default budget.
+ragged last tiles stay in bounds.  ``pick_tile_dw`` co-picks (NB, BU) from
+the same 8 MiB default budget: row-tiled maps keep NB=1, whole-image maps
+grow NB until the budget binds (``pick_bu_dw`` is the BU-only
+special case).
 """
 from __future__ import annotations
 
@@ -77,36 +84,61 @@ def unpack_dw_taps(packed: jax.Array, C: int) -> jax.Array:
 
 
 def tile_vmem_bytes_dw(W: int, C: int, kh: int, kw: int, *, bu: int,
-                       stride: int = 1, m: int = 1) -> int:
-    """Analytic per-program VMEM working set for a ``bu``-row dw tile."""
+                       stride: int = 1, m: int = 1, nb: int = 1) -> int:
+    """Analytic per-program VMEM working set for an ``nb``-image, ``bu``-row
+    dw tile."""
     V = (W - kw) // stride + 1
     slab = slab_rows(bu, kh, stride=stride)
     c8 = -(-C // 8)
-    x_b = slab * W * C * 4
+    x_b = nb * slab * W * C * 4
     w_packed = m * kh * kw * c8
     w_eff = kh * kw * c8 * 8 * 4 * (m + 1)   # unpacked levels + folded taps
-    acc = bu * V * C * 4
-    out = bu * V * C * 4
+    acc = nb * bu * V * C * 4
+    out = nb * bu * V * C * 4
     return x_b + w_packed + w_eff + acc + out
 
 
 def pick_bu_dw(H: int, W: int, C: int, kh: int, kw: int,
                budget_bytes: int = DEFAULT_VMEM_BUDGET, *,
-               stride: int = 1, m: int = 1) -> int:
-    """Largest dw row tile (output rows per program) fitting the budget."""
+               stride: int = 1, m: int = 1, nb: int = 1) -> int:
+    """Largest dw row tile (output rows per program) fitting the budget at a
+    fixed batch tile ``nb``."""
     U = (H - kh) // stride + 1
     for bu in range(max(U, 1), 1, -1):
         if tile_vmem_bytes_dw(W, C, kh, kw, bu=bu, stride=stride,
-                              m=m) <= budget_bytes:
+                              m=m, nb=nb) <= budget_bytes:
             return bu
     return 1
 
 
+def pick_tile_dw(B: int, H: int, W: int, C: int, kh: int, kw: int,
+                 budget_bytes: int = DEFAULT_VMEM_BUDGET, *,
+                 stride: int = 1, m: int = 1,
+                 nb_cap: int = 8) -> tuple[int, int]:
+    """Co-pick the (NB, BU) tile for the fused dw kernel.
+
+    Row-tiled maps (whole image over budget) keep NB=1; whole-image maps
+    grow NB while the working set fits the budget, capped at ``nb_cap``
+    (the VPU has no 128-row dimension to fill — past a handful of images
+    the unpack/dispatch amortization has flattened out).
+    """
+    U = (H - kh) // stride + 1
+    bu = pick_bu_dw(H, W, C, kh, kw, budget_bytes, stride=stride, m=m)
+    if bu < max(U, 1) or B <= 1:
+        return 1, bu
+    nb = 1
+    while nb < min(B, nb_cap) and tile_vmem_bytes_dw(
+            W, C, kh, kw, bu=bu, stride=stride, m=m,
+            nb=nb + 1) <= budget_bytes:
+        nb += 1
+    return nb, bu
+
+
 def _dw_kernel(x_ref, bp_ref, alpha_ref, bias_ref, o_ref, *,
-               kh: int, kw: int, C: int, stride: int,
+               kh: int, kw: int, C: int, stride: int, nb: int,
                u_tile: int, V: int, m_active: int, relu: bool):
-    """One (image, BU rows) tile: fold levels, tap-accumulate, epilogue."""
-    x = x_ref[0].astype(jnp.float32)                 # [slab, Wp, C]
+    """One (NB images, BU rows) tile: fold levels, tap-accumulate, epilogue."""
+    x = x_ref[...].astype(jnp.float32)               # [nb, slab, Wp, C]
     T, c8 = bp_ref.shape[1], bp_ref.shape[2]
     # fold the level sum into one effective fp tap weight per (tap, channel):
     # W_hat[t, c] = sum_{m < m_active} alpha[m, c] * B[m, t, c]  (Eq. 1)
@@ -116,21 +148,21 @@ def _dw_kernel(x_ref, bp_ref, alpha_ref, bias_ref, o_ref, *,
     w = w[:, :, :C].astype(jnp.float32)              # [m, T, C] ±1
     eff = jnp.sum(w * alpha_ref[...][:, None, :], axis=0)     # [T, C]
     # channel-wise tap accumulation on the VPU (no contraction to feed MXU)
-    acc = jnp.zeros((u_tile, V, C), jnp.float32)
+    acc = jnp.zeros((nb, u_tile, V, C), jnp.float32)
     for i in range(kh):
         for j in range(kw):
-            xs = x[i: i + (u_tile - 1) * stride + 1: stride,
+            xs = x[:, i: i + (u_tile - 1) * stride + 1: stride,
                    j: j + (V - 1) * stride + 1: stride, :]
-            acc = acc + xs * eff[i * kw + j][None, None, :]
+            acc = acc + xs * eff[i * kw + j][None, None, None, :]
     y = acc + bias_ref[0][None, None, :]
     if relu:
         y = jnp.maximum(y, 0.0)
-    o_ref[0] = y
+    o_ref[...] = y
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kh", "kw", "stride", "m_active", "relu", "bu",
+    static_argnames=("kh", "kw", "stride", "m_active", "relu", "bu", "nb",
                      "vmem_budget", "interpret"),
 )
 def binary_dwconv2d_pallas(
@@ -145,6 +177,7 @@ def binary_dwconv2d_pallas(
     m_active: int | None = None,
     relu: bool = True,
     bu: int | None = None,
+    nb: int | None = None,
     vmem_budget: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -155,6 +188,10 @@ def binary_dwconv2d_pallas(
     alpha:        [M, C] float   (channel-wise, paper §V-A3 / D_arch=1)
     bias:         [C] float
     returns       [B, U, V, C] float32, U = (Hp-kh)//stride + 1.
+
+    ``nb``/``bu`` fix the batch/row tile; leaving both None co-picks them
+    via :func:`pick_tile_dw` (giving ``bu`` alone keeps per-image blocking).
+    Every (nb, bu) tiling is bit-identical.
     """
     B, Hp, Wp, C = x.shape
     M, T, c8 = B_tap_packed.shape
@@ -165,38 +202,47 @@ def binary_dwconv2d_pallas(
     U = (Hp - kh) // stride + 1
     V = (Wp - kw) // stride + 1
 
-    if bu is None:
-        bu = pick_bu_dw(Hp, Wp, C, kh, kw,
-                        vmem_budget or DEFAULT_VMEM_BUDGET,
-                        stride=stride, m=m_active)
+    budget = vmem_budget or DEFAULT_VMEM_BUDGET
+    if nb is None and bu is None:
+        nb, bu = pick_tile_dw(B, Hp, Wp, C, kh, kw, budget,
+                              stride=stride, m=m_active)
+    elif nb is None:
+        nb = 1  # explicit BU: per-image row tiling (the pre-batch semantics)
+    elif bu is None:
+        bu = pick_bu_dw(Hp, Wp, C, kh, kw, budget, stride=stride,
+                        m=m_active, nb=max(1, min(nb, B)))
+    nb = max(1, min(nb, B))
     bu = max(1, min(bu, U))
     nt = -(-U // bu)
     adv = bu * stride
     slab = slab_rows(bu, kh, stride=stride)
     rows_needed = (nt - 1) * adv + slab
-    if rows_needed > Hp:  # ragged last tile: zero rows, sliced off below
-        x = jnp.pad(x, ((0, 0), (0, rows_needed - Hp), (0, 0), (0, 0)))
+    b_rem = (-B) % nb                       # ragged batch / ragged last row
+    row_pad = max(rows_needed - Hp, 0)      # tile: zero pad, sliced off below
+    if b_rem or row_pad:
+        x = jnp.pad(x, ((0, b_rem), (0, row_pad), (0, 0), (0, 0)))
+    Bp = B + b_rem
 
     bp = B_tap_packed[:m_active]
     alpha = alpha[:m_active].astype(jnp.float32)
     bias2 = bias.astype(jnp.float32).reshape(1, C)
 
-    grid = (B, nt)
+    grid = (Bp // nb, nt)
     out = pl.pallas_call(
         functools.partial(
-            _dw_kernel, kh=kh, kw=kw, C=C, stride=stride,
+            _dw_kernel, kh=kh, kw=kw, C=C, stride=stride, nb=nb,
             u_tile=bu, V=V, m_active=m_active, relu=relu),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, slab, Wp, C),
-                         lambda b, t: (b, t * adv, 0, 0),
+            pl.BlockSpec((nb, slab, Wp, C),
+                         lambda b, t: (b * nb, t * adv, 0, 0),
                          indexing_mode=pl.Unblocked()),
             pl.BlockSpec((m_active, T, c8), lambda b, t: (0, 0, 0)),
             pl.BlockSpec((m_active, C), lambda b, t: (0, 0)),
             pl.BlockSpec((1, C), lambda b, t: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bu, V, C), lambda b, t: (b, t, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, nt * bu, V, C), jnp.float32),
+        out_specs=pl.BlockSpec((nb, bu, V, C), lambda b, t: (b, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, nt * bu, V, C), jnp.float32),
         interpret=interpret,
     )(x, bp, alpha, bias2)
-    return out[:, :U]
+    return out[:B, :U]

@@ -83,15 +83,18 @@ def binary_conv2d(
     interpret: bool = False,
     bd: int | None = None,
     bu: int | None = None,
+    nb: int | None = None,
     vmem_budget: int | None = None,
 ) -> jax.Array:
     """Fused binary conv + bias + max-pool + ReLU via the Pallas kernel.
 
     x: [B, H, W, C] -> [B, U//pool, V//pool, D] in fp32.  The im2col tensor
     never touches HBM (patch extraction runs in VMEM inside the kernel).
-    ``bu`` fixes the output row tile per program; None auto-picks it from
-    the VMEM budget (kernels/binary_conv.py pick_bu) — whole-image blocking
-    whenever the feature map fits.
+    ``nb``/``bu`` fix the batch tile (images folded into the GEMM row dim
+    per program) and the output row tile; leaving both None co-picks them
+    from the VMEM budget (kernels/binary_conv.py pick_tile) — NB grows on
+    small late-layer maps until the MXU row dim saturates, big maps keep
+    NB=1 and row-tile.
     """
     from repro.core.binconv import same_pads
 
@@ -108,7 +111,7 @@ def binary_conv2d(
         x, B_tap_packed, alpha, bias,
         kh=kh, kw=kw, stride=stride, pool=pool, group_size=group_size,
         m_active=m_active, relu=relu, bd=bd or _pick_block(D, 128),
-        bu=bu, vmem_budget=vmem_budget, interpret=interpret,
+        bu=bu, nb=nb, vmem_budget=vmem_budget, interpret=interpret,
     )
 
 
@@ -126,13 +129,15 @@ def binary_dwconv2d(
     relu: bool = True,
     interpret: bool = False,
     bu: int | None = None,
+    nb: int | None = None,
     vmem_budget: int | None = None,
 ) -> jax.Array:
     """Fused binary depth-wise conv + bias + ReLU via the Pallas kernel.
 
     x: [B, H, W, C] -> [B, U, V, C] fp32 (paper §V-A3: depth-wise layers are
     approximated channel-wise; D_arch = 1).  SAME padding is resolved here
-    like :func:`binary_conv2d`, so the kernel only sees pre-padded inputs.
+    like :func:`binary_conv2d`, so the kernel only sees pre-padded inputs;
+    ``nb``/``bu`` tile the batch/row dims (None = pick_tile_dw co-pick).
     """
     from repro.core.binconv import same_pads
     from repro.kernels import binary_dwconv as bdw
@@ -146,5 +151,5 @@ def binary_dwconv2d(
     return bdw.binary_dwconv2d_pallas(
         x, B_tap_packed, alpha, bias,
         kh=kh, kw=kw, stride=stride, m_active=m_active, relu=relu,
-        bu=bu, vmem_budget=vmem_budget, interpret=interpret,
+        bu=bu, nb=nb, vmem_budget=vmem_budget, interpret=interpret,
     )

@@ -51,7 +51,10 @@ def cnn_a_forward(params, x: jax.Array, quant: QuantConfig = DENSE) -> jax.Array
     conv2 4x4 VALID -> 18x18x150, AMU pool 6 -> 3x3x150 = 1350
 
     Each conv+pool stage goes through conv2d_relu_pool, so a binary
-    deployment with quant.fuse_conv runs the fused implicit-GEMM kernel.
+    deployment with quant.fuse_conv runs the fused implicit-GEMM kernel —
+    conv2's small (3x3 pooled) output map is where the kernel's batch tile
+    folds several images per program to fill the MXU rows
+    (quant.conv_batch_tile overrides the auto pick).
     """
     y = binconv.conv2d_relu_pool(params["conv1"], x, pool=2, quant=quant)
     y = binconv.conv2d_relu_pool(params["conv2"], y, pool=6, quant=quant)
@@ -114,7 +117,11 @@ def mobilenet_forward(params, x: jax.Array, quant: QuantConfig = DENSE):
     depth-wise convs are memory-bound and approximated channel-wise (paper
     §V-A3: D_arch=1 there).  With a packed tree (``binarize_mobilenet``) and
     ``quant.fuse_conv`` + ``use_pallas`` the whole dw->pw stack runs the
-    fused binary kernels — zero fp ``lax.conv`` calls end to end."""
+    fused binary kernels — zero fp ``lax.conv`` calls end to end.  The
+    back-half 14²/7² point-wise layers are where the kernels' (NB, BU)
+    batch tiling folds images per program to keep the MXU rows full
+    (``quant.conv_batch_tile`` / ``conv_vmem_budget`` override the auto
+    pick)."""
     y = binconv.conv2d_relu_pool(params["stem"], x, stride=2, padding="SAME",
                                  pool=1, quant=quant)
     for i, (stride, _) in enumerate(MOBILENET_BLOCKS):

@@ -1,12 +1,15 @@
 """Fused implicit-GEMM binary-conv kernel vs the jnp conv oracle, plus the
-conv-path bugfix regressions (im2col SAME parity, odd-group-size blocks)
-and the spatial row-tiling tier (halo slabs, pick_bu, tiled bit-exactness).
+conv-path bugfix regressions (im2col SAME parity, odd-group-size blocks),
+the spatial row-tiling tier (halo slabs, pick_bu, tiled bit-exactness), and
+the batch-tiling tier (NB images folded into the GEMM row dim, pick_tile).
 
 Mirrors the paper's §V-A2 verification style: the Pallas kernel (interpret
 mode on CPU) must match kernels/ref.py to fp32-accumulation tolerance across
 a shape sweep covering K % 8 != 0, m_active < M, stride 2, SAME/VALID, and
-pool ∈ {1, 2}; row-tiled blocking must additionally be *bit-exact* against
-whole-image blocking across stride/pool/ragged-tile combinations.
+pool ∈ {1, 2}; row-tiled and batch-tiled blocking must additionally be
+*bit-exact* against per-image whole-image blocking across
+stride/pool/ragged-tile/ragged-batch combinations (the kernel issues its
+contraction in fixed MXU-row-sized passes precisely so that holds).
 """
 import warnings
 
@@ -89,7 +92,7 @@ class TestFusedBinaryConvKernel:
         x = jax.random.normal(kx, (1, 8, 8, 5), jnp.float32)
         qc = QuantConfig(mode="binary", M=2, fuse_conv=True, use_pallas=True,
                          interpret=True)
-        binconv._warned_legacy_repack = False
+        binconv._reset_warnings()
         with warnings.catch_warnings(record=True) as rec:
             warnings.simplefilter("always")
             y_legacy = binconv.conv2d_relu_pool(legacy, x, quant=qc)
@@ -274,6 +277,23 @@ class TestRowTiledBlocking:
         # tiny budget degrades to a single pooled row, never 0
         assert bck.pick_bu(112, 112, 32, 1, 1, 64, 1, 1024, m=2) == 1
 
+    def test_auto_nb_bu_engage_on_small_maps(self):
+        """With neither nb nor bu forced, pick_tile folds several images of
+        a small map into one program — and the result is bit-exact vs the
+        forced per-image whole-image run."""
+        p, kx = _conv_case(77, 1, 1, 32, 48, 2)
+        x = jax.random.normal(kx, (6, 7, 7, 32), jnp.float32)
+        gs = 32 // p["alpha"].shape[1]
+        kw_args = dict(kh=1, kw=1, group_size=gs, interpret=True)
+        nb, bu = bck.pick_tile(6, 7, 7, 32, 1, 1, 48, m=2)
+        assert nb > 1 and bu == 7, (nb, bu)
+        auto = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"], **kw_args)
+        per_image = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"], nb=1, bu=10**6,
+            **kw_args)
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(per_image))
+
     def test_auto_bu_engages_on_large_maps(self):
         """The wrapper's auto pick tiles a map that exceeds the budget and
         still matches a forced whole-image run (tolerance-free)."""
@@ -287,3 +307,119 @@ class TestRowTiledBlocking:
         whole = bck.binary_conv2d_pallas(
             x, p["B_tap_packed"], p["alpha"], p["b"], bu=10**6, **kw_args)
         np.testing.assert_array_equal(np.asarray(auto), np.asarray(whole))
+
+
+class TestBatchTiledBlocking:
+    """Batch tiling (NB images folded into the implicit-GEMM row dim) must be
+    *bit-exact* against the per-image kernel (nb=1, whole-image BU) for every
+    (NB, BU) — the kernel issues its contraction in fixed MXU-row-sized
+    passes so each output row's reduction is tiling-invariant — including
+    ragged batches (B % NB != 0) padded with zero images."""
+
+    # name -> (kh, kw, C, D, H, W, stride, pool, B)
+    CASES = {
+        "cnn_a_conv2": (4, 4, 5, 24, 21, 21, 1, 6, 3),
+        "mnet_pw_7": (1, 1, 64, 32, 7, 7, 1, 1, 5),
+        "mnet_pw_7_stride2": (1, 1, 16, 24, 7, 7, 2, 1, 3),
+    }
+
+    @pytest.mark.parametrize("case", sorted(CASES))
+    @pytest.mark.parametrize("nb", [1, 2, "B"])
+    def test_batched_bit_exact_vs_per_image(self, case, nb):
+        kh, kw, C, D, H, W, stride, pool, B = self.CASES[case]
+        nb = B if nb == "B" else nb  # nb=2 leaves every case's batch ragged
+        p, kx = _conv_case(sum(self.CASES[case]), kh, kw, C, D, 2)
+        x = jax.random.normal(kx, (B, H, W, C), jnp.float32)
+        gs = kh * kw * C // p["alpha"].shape[1]
+        kw_args = dict(kh=kh, kw=kw, stride=stride, pool=pool, group_size=gs,
+                       interpret=True)
+        per_image = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"], nb=1, bu=10**6,
+            **kw_args)
+        batched = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"], nb=nb, **kw_args)
+        np.testing.assert_array_equal(np.asarray(per_image),
+                                      np.asarray(batched))
+
+    @pytest.mark.parametrize("nb,bu", [(2, 1), (3, 2), (5, 3)])
+    def test_joint_nb_bu_bit_exact(self, nb, bu):
+        """Batch and row tiling compose: ragged batch × ragged row tiles."""
+        p, kx = _conv_case(nb * 10 + bu, 3, 3, 6, 16, 2)
+        x = jax.random.normal(kx, (7, 9, 9, 6), jnp.float32)  # U=7, Uo=7
+        gs = 54 // p["alpha"].shape[1]
+        kw_args = dict(kh=3, kw=3, group_size=gs, interpret=True)
+        per_image = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"], nb=1, bu=10**6,
+            **kw_args)
+        tiled = bck.binary_conv2d_pallas(
+            x, p["B_tap_packed"], p["alpha"], p["b"], nb=nb, bu=bu, **kw_args)
+        np.testing.assert_array_equal(np.asarray(per_image),
+                                      np.asarray(tiled))
+
+    def test_batched_matches_oracle(self):
+        """Batch tiling through the public wrapper still matches the
+        HBM-materialized im2col oracle (ragged B=5, nb=2)."""
+        p, kx = _conv_case(321, 1, 1, 24, 40, 2)
+        x = jax.random.normal(kx, (5, 7, 7, 24), jnp.float32)
+        got = kops.binary_conv2d(
+            x, p["B_tap_packed"], p["alpha"], p["b"], kh=1, kw=1, nb=2,
+            interpret=True)
+        want = kref.fused_binary_conv_relu_pool_ref(
+            x, p["B_packed"], p["alpha"], kh=1, kw=1, bias=p["b"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_quant_config_threads_batch_tile(self):
+        """conv_batch_tile/conv_vmem_budget reach the kernel through the
+        model-layer routing and stay numerically equal to the default."""
+        p, kx = _conv_case(11, 4, 4, 5, 20, 2)
+        x = jax.random.normal(kx, (3, 12, 12, 5), jnp.float32)
+        qc = QuantConfig(mode="binary", M=2, fuse_conv=True, use_pallas=True,
+                         interpret=True)
+        base = binconv.conv2d_relu_pool(p, x, pool=3, quant=qc)
+        forced = binconv.conv2d_relu_pool(
+            p, x, pool=3, quant=qc.replace(conv_batch_tile=2,
+                                           conv_vmem_budget=2 * 2**20))
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(forced))
+
+    def test_pick_tile_grows_nb_on_small_maps(self):
+        """pw@7²: one image is 49 GEMM rows (38% of the 128-row MXU); the
+        pick minimizes the batch's total padded rows — at B=128 that lands
+        on NB=13 (637/640 rows per program)."""
+        nb, bu = bck.pick_tile(128, 7, 7, 512, 1, 1, 128, m=2)
+        assert (nb, bu) == (13, 7), (nb, bu)
+        occ = bck.mxu_row_occupancy(bck.gemm_rows(nb, bu, 7))
+        assert occ >= 0.95, occ
+        assert bck.batch_row_utilization(128, nb, 49) >= 0.95
+        assert bck.mxu_row_occupancy(bck.gemm_rows(1, 7, 7)) < 0.39
+        # per-output weight-unpack work drops ~NB x
+        gain = (bck.unpack_work_per_output(1, 7, 7, 512, m=2)
+                / bck.unpack_work_per_output(nb, 7, 7, 512, m=2))
+        assert gain == pytest.approx(nb)
+
+    def test_pick_tile_charges_ragged_batch_padding(self):
+        """The pick optimizes the whole batch, not one program: a batch of
+        6 folds into a single 294-row program rather than NB=5 + a ragged
+        program of 4 zero images, and a batch of exactly 16 becomes one
+        784-row program."""
+        assert bck.pick_tile(6, 7, 7, 512, 1, 1, 128, m=2) == (6, 7)
+        assert bck.pick_tile(16, 7, 7, 512, 1, 1, 128, m=2) == (16, 7)
+        assert (bck.batch_padded_rows(6, 6, 49)
+                < bck.batch_padded_rows(6, 5, 49))
+
+    def test_pick_tile_keeps_nb1_on_large_maps(self):
+        """112² stem-scale maps: the row slab already fills the MXU and VMEM
+        binds, so the pick row-tiles with NB=1."""
+        nb, bu = bck.pick_tile(8, 112, 112, 32, 1, 1, 64, m=2)
+        assert nb == 1 and 1 <= bu < 112, (nb, bu)
+        # batch cap: never folds more images than the batch holds
+        nb, bu = bck.pick_tile(2, 7, 7, 512, 1, 1, 128, m=2)
+        assert nb <= 2 and bu == 7, (nb, bu)
+        # B=1 short-circuits to per-image
+        assert bck.pick_tile(1, 7, 7, 512, 1, 1, 128, m=2) == (1, 7)
+
+    def test_pick_tile_budget_binds_nb(self):
+        """A tiny budget stops NB growth before occupancy saturates."""
+        budget = bck.tile_vmem_bytes(7, 512, 1, 1, 128, bu=7, m=2, nb=2)
+        nb, bu = bck.pick_tile(16, 7, 7, 512, 1, 1, 128, 1, budget, m=2)
+        assert nb == 2 and bu == 7, (nb, bu)

@@ -71,6 +71,41 @@ class TestBinaryDwConvKernel:
             np.testing.assert_array_equal(np.asarray(whole),
                                           np.asarray(tiled))
 
+    @pytest.mark.parametrize("nb", [1, 2, 3])
+    def test_batch_tiled_bit_exact_dw14(self, nb):
+        """dw@14² (MobileNet back half): NB images per program — including
+        the ragged B=3, nb=2 split — bit-exact vs per-image blocking."""
+        p, kx = _dw_case(33, 32, 2)
+        x = jax.random.normal(kx, (3, 16, 16, 32), jnp.float32)  # SAME 14²+2
+        args = (x, p["B_tap_packed"], p["alpha"], p["b"])
+        kw_args = dict(kh=3, kw=3, stride=1, interpret=True)
+        per_image = bdw.binary_dwconv2d_pallas(*args, nb=1, bu=10**6,
+                                               **kw_args)
+        batched = bdw.binary_dwconv2d_pallas(*args, nb=nb, **kw_args)
+        np.testing.assert_array_equal(np.asarray(per_image),
+                                      np.asarray(batched))
+
+    def test_batch_and_row_tiles_compose(self):
+        p, kx = _dw_case(44, 8, 2)
+        x = jax.random.normal(kx, (5, 12, 10, 8), jnp.float32)
+        args = (x, p["B_tap_packed"], p["alpha"], p["b"])
+        kw_args = dict(kh=3, kw=3, stride=1, interpret=True)
+        per_image = bdw.binary_dwconv2d_pallas(*args, nb=1, bu=10**6,
+                                               **kw_args)
+        tiled = bdw.binary_dwconv2d_pallas(*args, nb=2, bu=4, **kw_args)
+        np.testing.assert_array_equal(np.asarray(per_image),
+                                      np.asarray(tiled))
+
+    def test_pick_tile_dw_regimes(self):
+        """Whole-image dw maps grow NB until the budget or cap binds;
+        row-tiled (112²-scale) maps keep NB=1."""
+        nb, bu = bdw.pick_tile_dw(8, 16, 16, 32, 3, 3, m=2)
+        assert bu == 14 and nb > 1, (nb, bu)
+        nb112, bu112 = bdw.pick_tile_dw(8, 114, 114, 32, 3, 3,
+                                        2 * 1024 * 1024, m=2)
+        assert nb112 == 1 and bu112 < 112, (nb112, bu112)
+        assert bdw.pick_tile_dw(1, 16, 16, 32, 3, 3, m=2)[0] == 1
+
     def test_pack_unpack_roundtrip(self):
         key = jax.random.PRNGKey(3)
         B = jnp.where(jax.random.bernoulli(key, shape=(2, 9, 13)), 1,

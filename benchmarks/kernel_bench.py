@@ -5,17 +5,24 @@ CPU wall times (interpret-mode Pallas) are NOT TPU-indicative; the derived
 columns that matter are the analytic VMEM working set, HBM bytes per tile,
 MXU row occupancy, per-output weight-unpack work, and arithmetic intensity —
 the quantities the BlockSpec design controls (see kernels/binary_matmul.py
-and kernels/binary_conv.py docstrings).  Every slab/VMEM/occupancy number is
-computed by the kernel module's own exported functions (``slab_rows``,
-``tile_vmem_bytes``, ``pick_tile``, ``mxu_row_occupancy``, ...), so this
-bench cannot drift from the BlockSpec reality.
+and kernels/binary_conv.py docstrings).
+
+Layer shapes are NOT hand-maintained: every conv/dw row comes from
+``program.layer_stats()`` of an abstractly-compiled BinArrayProgram
+(repro.deploy.abstract_program — jax.eval_shape, so no weights are ever
+computed), which in turn derives every slab/VMEM/occupancy number through
+the kernel modules' own exported analytics (``slab_rows``,
+``tile_vmem_bytes``, ``tile_hbm_bytes``, ``pick_tile``, ...).  The bench
+therefore cannot drift from either the network topology (models/cnn.py
+LayerSpec lists) or the BlockSpec reality.
 
 ``run_structured`` returns the same derived metrics as JSON-ready dicts —
 ``benchmarks/run.py --json BENCH_kernel.json`` writes them next to the CSV
-so future PRs can diff perf machine-readably.
+(plus a whole-program section) so future PRs can diff perf machine-readably.
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -51,53 +58,54 @@ def tile_stats(bt, bn, bk, M):
     return vmem, ai_packed, ai_dense
 
 
-def conv_tile_stats(H, W, C, kh, kw, D, M, *, stride=1, pool=1, bd=128,
-                    bu=None, nb=1):
-    """Analytic HBM bytes moved per (batch-tile, D-tile, row-tile) kernel
-    program: fused implicit GEMM vs the explicit-im2col path, fp32
-    activations.  Slab geometry comes from ``kernels/binary_conv.slab_rows``
-    — the same function the kernel's BlockSpec uses.
+# ---------------------------------------------------------------------------
+# Program-derived layer cases (the compile-once API is the source of truth)
+# ---------------------------------------------------------------------------
 
-    fused (kernels/binary_conv.py): read NB images' input row-slabs (halo
-    rows included) + the bit-packed per-tap weight tile, write the *pooled*
-    output tile.  The patch tensor lives only in VMEM.  ``bu`` is the row
-    tile in pooled output rows; None = whole-image blocking (the BU = Uo
-    special case).  ``nb`` is the batch tile (images folded into the GEMM
-    row dim).
+@functools.lru_cache(maxsize=None)
+def _layer_stats(arch: str, B: int, M: int = 2):
+    """name -> layer_stats() row of an abstractly-compiled program (frozen
+    plans + stats only; the weights are ShapeDtypeStructs)."""
+    from repro import deploy
 
-    im2col (core/binconv.py conv2d + relu_maxpool): additionally writes the
-    tile's [nb·u·V, kh·kw·C] patch slice to HBM and reads it back for the
-    matmul, then writes the unpooled conv output and re-reads it for
-    pooling.
-    """
-    U = (H - kh) // stride + 1
-    V = (W - kw) // stride + 1
-    bd = min(bd, D)
-    uo = max(U // pool, 1)
-    bu = uo if bu is None else min(bu, uo)
-    u_tile = bu * pool
-    slab = bck.slab_rows(bu, kh, stride=stride, pool=pool)
-    x_b = nb * min(slab, H) * W * C * 4
-    w_packed = M * kh * kw * ((C + 7) // 8) * bd
-    out_pooled = nb * bu * (V // pool) * bd * 4
-    out_unpooled = nb * u_tile * V * bd * 4
-    patches = nb * u_tile * V * kh * kw * C * 4
-    fused = x_b + w_packed + out_pooled
-    im2col_path = (x_b + 2 * patches + w_packed
-                   + out_unpooled * 2 + out_pooled)
-    return fused, im2col_path, im2col_path / fused
+    qc = QuantConfig(mode="binary", M=M, K_iters=1)
+    shape = (B, 48, 48, 3) if arch == "cnn_a" else (B, 224, 224, 3)
+    prog = deploy.abstract_program(arch, qc, shape)
+    return {s["name"]: s for s in prog.layer_stats()}
 
 
-# the paper's conv layers (CNN-A §V-A1) + a mid-net MobileNet point-wise conv
-CONV_CASES = [
-    ("cnn_a_conv1", dict(H=48, W=48, C=3, kh=7, kw=7, D=5, M=2, pool=2)),
-    ("cnn_a_conv2", dict(H=21, W=21, C=5, kh=4, kw=4, D=150, M=2, pool=6)),
-    ("mobilenet_pw", dict(H=14, W=14, C=256, kh=1, kw=1, D=256, M=2)),
-]
+def _conv_whole_image_vmem(s: dict, M: int) -> int:
+    """Whole-image (NB=1, BU=Uo) working set for a conv layer-stat row."""
+    Wp = s["padded_in"][1]
+    C = s["in_shape"][-1]
+    uo = s["out_shape"][1]
+    return bck.tile_vmem_bytes(Wp, C, s["kh"], s["kw"], s["plan"]["bd"],
+                               bu=uo, pool=s["pool"], stride=s["stride"],
+                               m=M)
+
+
+def _dw_whole_image_vmem(s: dict, M: int) -> int:
+    Wp = s["padded_in"][1]
+    C = s["in_shape"][-1]
+    U = s["out_shape"][1]
+    return bdw.tile_vmem_bytes_dw(Wp, C, s["kh"], s["kw"], bu=U,
+                                  stride=s["stride"], m=M)
+
+
+# conv layers whose per-tile VMEM/HBM trajectory the bench tracks: CNN-A's
+# two convs + the MobileNet-B2 (224²) tier where row tiling must engage on
+# the early maps and the batch tile on the 7² back half.
+B2_CONV_ROWS = ("stem", "pw0", "pw1", "pw3", "pw5", "pw11")
+B2_DW_ROWS = ("dw0", "dw1", "dw5")
+# small late-layer maps where one image underfills the 128-row MXU: the
+# batch-tile tier (B = a bulk serving batch the pick may fold from)
+MXU_OCCUPANCY_ROWS = (("cnn_a", "conv2"), ("mobilenet", "pw11"),
+                      ("mobilenet", "pw12"))
 
 
 def conv_rows(quick: bool = False):
-    """Fused-conv section: wall time (interpret vs jnp oracle) + HBM bytes."""
+    """Fused-conv section: wall time (interpret vs jnp oracle) + HBM bytes
+    per tile for the program-picked plans."""
     rows = []
     kh, kw, C, D, M, H, W, pool = (4, 4, 5, 32, 2, 21, 21, 2)
     key = jax.random.PRNGKey(0)
@@ -117,170 +125,105 @@ def conv_rows(quick: bool = False):
     rows.append(("kernel_binary_conv_fused_pallas_interpret", t_pal,
                  "interpret-mode (CPU correctness path, not TPU wall time)"))
 
-    for name, case in CONV_CASES:
-        fused, im2col_b, gain = conv_tile_stats(**case)
+    stats = {**_layer_stats("cnn_a", 8), "pw5": _layer_stats("mobilenet", 8)["pw5"]}
+    for name in ("conv1", "conv2", "pw5"):
+        s = stats[name]
         rows.append((
-            f"conv_hbm_bytes_per_tile_{name}", 0.0,
-            f"fused_KB={fused / 1024:.1f} im2col_KB={im2col_b / 1024:.1f} "
-            f"reduction={gain:.1f}x"))
+            f"conv_hbm_bytes_per_tile_{name}_{s['in_shape'][1]}", 0.0,
+            f"fused_KB={s['hbm_fused_bytes'] / 1024:.1f} "
+            f"im2col_KB={s['hbm_im2col_bytes'] / 1024:.1f} "
+            f"reduction={s['hbm_im2col_bytes'] / s['hbm_fused_bytes']:.1f}x"))
     return rows
-
-
-# MobileNet-B2 (alpha=1, rho=1, 224² — the paper's Table III headline row).
-# H/W are the SAME-padded input dims of each layer; stem + the early
-# point-wise layers are exactly where whole-image blocking blows the VMEM
-# budget and the row tiling (kernels/binary_conv.py pick_tile) must engage
-# with NB=1, while the 7² back half is where the batch tile must grow.
-MOBILENET_B2_CASES = [
-    ("stem_224", dict(H=225, W=225, C=3, kh=3, kw=3, D=32, M=2, stride=2)),
-    ("pw0_112", dict(H=112, W=112, C=32, kh=1, kw=1, D=64, M=2)),
-    ("pw1_56", dict(H=56, W=56, C=64, kh=1, kw=1, D=128, M=2)),
-    ("pw3_28", dict(H=28, W=28, C=128, kh=1, kw=1, D=256, M=2)),
-    ("pw5_14", dict(H=14, W=14, C=256, kh=1, kw=1, D=512, M=2)),
-    ("pw11_7", dict(H=7, W=7, C=512, kh=1, kw=1, D=1024, M=2)),
-]
-
-# depth-wise layers (binary_dwconv.py): SAME-padded dims, channel-wise
-MOBILENET_B2_DW_CASES = [
-    ("dw0_112", dict(H=114, W=114, C=32, stride=1)),
-    ("dw1_112s2", dict(H=113, W=113, C=64, stride=2)),
-    ("dw5_28s2", dict(H=29, W=29, C=256, stride=2)),
-]
-
-# The MXU-row-occupancy tier: small late-layer maps where one image feeds
-# the 128-row MXU far under capacity, whole-image-per-program vs the
-# batch-tiled pick.  B is the serving batch the pick may fold from (a bulk
-# batch: the pick minimizes the batch's total padded rows, so B matters).
-MXU_OCCUPANCY_CASES = [
-    ("cnn_a_conv2", dict(H=21, W=21, C=5, kh=4, kw=4, D=150, M=2, pool=6,
-                         B=128)),
-    ("mnet_pw11_7", dict(H=7, W=7, C=512, kh=1, kw=1, D=1024, M=2, B=128)),
-    ("mnet_pw12_7", dict(H=7, W=7, C=1024, kh=1, kw=1, D=1024, M=2, B=128)),
-]
-
-
-def conv_case_stats(H, W, C, kh, kw, D, M, *, stride=1, pool=1, B=1,
-                    budget=None):
-    """Everything the bench (and the JSON artifact) reports for one conv
-    layer shape, derived exclusively through the kernel module's exported
-    analytics: the (NB, BU) pick, per-program VMEM bytes, fused vs im2col
-    HBM bytes, MXU row occupancy, and per-output weight-unpack work."""
-    budget = budget or bck.DEFAULT_VMEM_BUDGET
-    bd = min(128, D)
-    U = (H - kh) // stride + 1
-    V = (W - kw) // stride + 1
-    uo = max(U // pool, 1)
-    K = kh * kw * C
-    nb, bu = bck.pick_tile(B, H, W, C, kh, kw, bd, pool, budget,
-                           stride=stride, m=M)
-    vmem_whole = bck.tile_vmem_bytes(W, C, kh, kw, bd, bu=uo, stride=stride,
-                                     pool=pool, m=M)
-    vmem_tiled = bck.tile_vmem_bytes(W, C, kh, kw, bd, bu=bu, stride=stride,
-                                     pool=pool, m=M, nb=nb)
-    fused, im2col_b, hbm_gain = conv_tile_stats(
-        H, W, C, kh, kw, D, M, stride=stride, pool=pool, bd=bd, bu=bu, nb=nb)
-    occ_whole = bck.mxu_row_occupancy(bck.gemm_rows(1, uo, V, pool=pool))
-    occ_picked = bck.mxu_row_occupancy(bck.gemm_rows(nb, bu, V, pool=pool))
-    rows_img = bck.gemm_rows(1, bu, V, pool=pool)
-    util_batch = (bck.batch_row_utilization(B, nb, rows_img)
-                  if bu == uo else occ_picked)
-    return {
-        "B": B, "nb": nb, "bu": bu, "uo": uo, "bd": bd, "K": K,
-        "batch_row_utilization": util_batch,
-        "vmem_whole_bytes": vmem_whole, "vmem_tiled_bytes": vmem_tiled,
-        "vmem_budget_bytes": budget,
-        "hbm_fused_bytes": fused, "hbm_im2col_bytes": im2col_b,
-        "hbm_reduction": hbm_gain,
-        "mxu_row_occupancy_whole": occ_whole,
-        "mxu_row_occupancy_picked": occ_picked,
-        "unpack_per_output_whole": bck.unpack_work_per_output(
-            1, uo, max(V // pool, 1), K, m=M),
-        "unpack_per_output_picked": bck.unpack_work_per_output(
-            nb, bu, max(V // pool, 1), K, m=M),
-    }
 
 
 def mobilenet_b2_rows():
     """MobileNet-B2 (224²) tier: per-tile VMEM working set for whole-image
-    vs picked (NB, BU) blocking, plus fused-vs-im2col HBM bytes under the
-    picked blocking — the quantities behind the §V Table III scaling claim."""
+    vs the program's frozen (NB, BU) plan, plus fused-vs-im2col HBM bytes
+    under that plan — the quantities behind the §V Table III scaling claim,
+    straight from program.layer_stats()."""
     budget = bck.DEFAULT_VMEM_BUDGET
+    M = 2
+    stats = _layer_stats("mobilenet", 8, M)
     rows = []
-    for name, case in MOBILENET_B2_CASES:
-        s = conv_case_stats(B=8, **case)
+    for name in B2_CONV_ROWS:
+        s = stats[name]
+        plan = s["plan"]
         rows.append((
-            f"conv_vmem_per_tile_mnet_b2_{name}", 0.0,
-            f"nb={s['nb']} bu={s['bu']}/{s['uo']} "
-            f"vmem_whole_MB={s['vmem_whole_bytes'] / 2**20:.2f} "
-            f"vmem_tiled_MB={s['vmem_tiled_bytes'] / 2**20:.2f} "
+            f"conv_vmem_per_tile_mnet_b2_{name}_{s['in_shape'][1]}", 0.0,
+            f"nb={plan['nb']} bu={plan['bu']}/{s['out_shape'][1]} "
+            f"vmem_whole_MB={_conv_whole_image_vmem(s, M) / 2**20:.2f} "
+            f"vmem_tiled_MB={s['vmem_bytes'] / 2**20:.2f} "
             f"budget_MB={budget / 2**20:.0f} "
             f"fused_KB={s['hbm_fused_bytes'] / 1024:.1f} "
             f"im2col_KB={s['hbm_im2col_bytes'] / 1024:.1f} "
-            f"hbm_reduction={s['hbm_reduction']:.1f}x"))
-    for name, case in MOBILENET_B2_DW_CASES:
-        H, W, C, stride = case["H"], case["W"], case["C"], case["stride"]
-        M = 2
-        U = (H - 3) // stride + 1
-        whole = bdw.tile_vmem_bytes_dw(W, C, 3, 3, bu=U, stride=stride, m=M)
-        nb, bu = bdw.pick_tile_dw(8, H, W, C, 3, 3, budget, stride=stride,
-                                  m=M)
-        tiled = bdw.tile_vmem_bytes_dw(W, C, 3, 3, bu=bu, stride=stride, m=M,
-                                       nb=nb)
+            f"hbm_reduction={s['hbm_im2col_bytes'] / s['hbm_fused_bytes']:.1f}x"))
+    for name in B2_DW_ROWS:
+        s = stats[name]
+        C = s["in_shape"][-1]
         c8 = -(-C // 8)
         # binary vs fp32 dw weight stream per image (the dw memory-bound win)
         w_bits = M * 9 * c8 + M * C * 4
         w_fp = 9 * C * 4
         rows.append((
-            f"dwconv_vmem_per_tile_mnet_b2_{name}", 0.0,
-            f"nb={nb} bu={bu}/{U} vmem_whole_MB={whole / 2**20:.2f} "
-            f"vmem_tiled_MB={tiled / 2**20:.2f} "
+            f"dwconv_vmem_per_tile_mnet_b2_{name}_{s['in_shape'][1]}", 0.0,
+            f"nb={s['plan']['nb']} bu={s['plan']['bu']}/{s['out_shape'][1]} "
+            f"vmem_whole_MB={_dw_whole_image_vmem(s, M) / 2**20:.2f} "
+            f"vmem_tiled_MB={s['vmem_bytes'] / 2**20:.2f} "
             f"budget_MB={budget / 2**20:.0f} "
             f"w_packed_B={w_bits} w_fp32_B={w_fp}"))
     return rows
 
 
-def mxu_occupancy_rows():
-    """Whole-image-per-program vs batch-tiled rows for the small back-half
-    maps: MXU row occupancy and per-output weight-unpack work, the two
-    quantities the (NB, BU) batch tile exists to fix."""
+def mxu_occupancy_rows(B: int = 128):
+    """Whole-image-per-program vs the program's batch-tiled plan for the
+    small back-half maps: MXU row occupancy and per-output weight-unpack
+    work, the two quantities the (NB, BU) batch tile exists to fix."""
     rows = []
-    for name, case in MXU_OCCUPANCY_CASES:
-        s = conv_case_stats(**case)
+    M = 2
+    for arch, name in MXU_OCCUPANCY_ROWS:
+        s = _layer_stats(arch, B, M)[name]
+        plan = s["plan"]
+        uo, vo = s["out_shape"][1], s["out_shape"][2]
+        V = vo * s["pool"]
+        K = s["kh"] * s["kw"] * s["in_shape"][-1]
+        occ_whole = bck.mxu_row_occupancy(
+            bck.gemm_rows(1, uo, V, pool=s["pool"]))
         rows.append((
-            f"conv_mxu_occupancy_{name}", 0.0,
-            f"nb={s['nb']} bu={s['bu']}/{s['uo']} B={s['B']} "
-            f"occ_whole={s['mxu_row_occupancy_whole']:.2f} "
-            f"occ_batched={s['mxu_row_occupancy_picked']:.2f} "
+            f"conv_mxu_occupancy_{arch}_{name}", 0.0,
+            f"nb={plan['nb']} bu={plan['bu']}/{uo} B={B} "
+            f"occ_whole={occ_whole:.2f} "
+            f"occ_batched={s['mxu_row_occupancy']:.2f} "
             f"util_batch={s['batch_row_utilization']:.2f} "
-            f"unpack_per_out_whole={s['unpack_per_output_whole']:.1f} "
-            f"unpack_per_out_batched={s['unpack_per_output_picked']:.1f} "
-            f"vmem_tiled_MB={s['vmem_tiled_bytes'] / 2**20:.2f}"))
+            f"unpack_per_out_whole="
+            f"{bck.unpack_work_per_output(1, uo, vo, K, m=M):.1f} "
+            f"unpack_per_out_batched="
+            f"{bck.unpack_work_per_output(plan['nb'], plan['bu'], vo, K, m=M):.1f} "
+            f"vmem_tiled_MB={s['vmem_bytes'] / 2**20:.2f}"))
     return rows
 
 
 def run_structured(quick: bool = False):
     """Machine-readable derived metrics (no wall times — those are CPU
-    interpret-mode noise).  Consumed by ``benchmarks/run.py --json``."""
+    interpret-mode noise), straight from program.layer_stats().  Consumed by
+    ``benchmarks/run.py --json``."""
     out = []
-    for name, case in MOBILENET_B2_CASES:
+    b2 = _layer_stats("mobilenet", 8)
+    for name in B2_CONV_ROWS:
         out.append({"name": f"conv_mnet_b2_{name}", "kind": "conv_tile",
-                    **conv_case_stats(B=8, **case)})
-    for name, case in MXU_OCCUPANCY_CASES:
-        out.append({"name": f"conv_mxu_occupancy_{name}",
-                    "kind": "mxu_occupancy", **conv_case_stats(**case)})
-    for name, case in CONV_CASES:
-        fused, im2col_b, gain = conv_tile_stats(**case)
-        out.append({"name": f"conv_hbm_{name}", "kind": "hbm_per_tile",
-                    "hbm_fused_bytes": fused, "hbm_im2col_bytes": im2col_b,
-                    "hbm_reduction": gain})
-    for name, case in MOBILENET_B2_DW_CASES:
-        H, W, C, stride = case["H"], case["W"], case["C"], case["stride"]
-        nb, bu = bdw.pick_tile_dw(8, H, W, C, 3, 3, stride=stride, m=2)
-        out.append({
-            "name": f"dwconv_mnet_b2_{name}", "kind": "dw_tile",
-            "nb": nb, "bu": bu,
-            "vmem_tiled_bytes": bdw.tile_vmem_bytes_dw(
-                W, C, 3, 3, bu=bu, stride=stride, m=2, nb=nb)})
+                    "vmem_whole_bytes": _conv_whole_image_vmem(b2[name], 2),
+                    "vmem_budget_bytes": bck.DEFAULT_VMEM_BUDGET,
+                    **b2[name]})
+    for name in B2_DW_ROWS:
+        out.append({"name": f"dwconv_mnet_b2_{name}", "kind": "dw_tile",
+                    "vmem_whole_bytes": _dw_whole_image_vmem(b2[name], 2),
+                    **b2[name]})
+    for arch, name in MXU_OCCUPANCY_ROWS:
+        out.append({"name": f"conv_mxu_occupancy_{arch}_{name}",
+                    "kind": "mxu_occupancy", "B": 128,
+                    **_layer_stats(arch, 128)[name]})
+    for name in ("conv1", "conv2"):
+        out.append({"name": f"conv_hbm_cnn_a_{name}", "kind": "hbm_per_tile",
+                    **_layer_stats("cnn_a", 8)[name]})
     return out
 
 

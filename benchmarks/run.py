@@ -5,9 +5,12 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  With
 every selected module that exports ``run_structured(quick)`` contributes
 JSON-ready dicts of its *derived* metrics (VMEM/HBM bytes, MXU occupancy,
 tile picks, device-call counts — no CPU wall times, which are noise), plus
-the CSV rows themselves, so future PRs can diff perf without parsing the
-human-oriented derived strings.  CI uploads ``BENCH_kernel.json`` next to
-the CSV artifact (.github/workflows/ci.yml).
+the CSV rows themselves, plus a ``program`` section with the deploy
+compiler's per-layer tile plans and MAC/byte stats
+(``BinArrayProgram.layer_stats()`` for CNN-A and MobileNet-B1/B2), so
+future PRs can diff both runtime perf and compile-time decisions without
+parsing the human-oriented derived strings.  CI uploads
+``BENCH_kernel.json`` next to the CSV artifact (.github/workflows/ci.yml).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table2,...]
                                                 [--json BENCH_kernel.json]
@@ -28,6 +31,28 @@ MODULES = [
     ("roofline", "benchmarks.roofline_bench"),
     ("serve", "benchmarks.serve_bench"),
 ]
+
+# compile-time sections of the JSON artifact: per-layer tile plans, VMEM/HBM
+# bytes, and MAC counts straight from BinArrayProgram.layer_stats() (abstract
+# compile — jax.eval_shape, no weights computed), so BENCH_kernel.json tracks
+# the deploy compiler's decisions PR over PR.
+PROGRAMS = {
+    "cnn_a": ("cnn_a", (8, 48, 48, 3), {}),
+    "mobilenet_b1": ("mobilenet", (8, 128, 128, 3), {"width_mult": 0.5}),
+    "mobilenet_b2": ("mobilenet", (8, 224, 224, 3), {}),
+}
+
+
+def program_section() -> dict:
+    from repro import deploy
+    from repro.core.binlinear import QuantConfig
+
+    qc = QuantConfig(mode="binary", M=2, K_iters=1)
+    out = {}
+    for key, (arch, shape, kw) in PROGRAMS.items():
+        prog = deploy.abstract_program(arch, qc, shape, **kw)
+        out[key] = {"totals": prog.totals(), "layers": prog.layer_stats()}
+    return out
 
 
 def main() -> None:
@@ -73,6 +98,13 @@ def main() -> None:
             doc["modules"][key] = {"error": f"{type(e).__name__}: {e}"}
         print(f"{key}_total,{(time.time() - t0) * 1e6:.0f},", flush=True)
     if args.json:
+        try:
+            doc["program"] = program_section()
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            doc["program"] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"program_section_FAILED,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)
         print(f"json_written,0,{args.json}", file=sys.stderr)

@@ -5,7 +5,9 @@ Prints our MAC-exact model's fps next to the paper's numbers with ratios,
 plus a per-layer utilization cross-reference: the paper's Table III scaling
 holds only while every PA stays busy (D fills the D_arch·N_LSA lanes each
 pass), and our Pallas port's analog is the MXU row occupancy the (NB, BU)
-batch tile buys (kernels/binary_conv.py pick_tile).  The
+batch tile buys.  Every layer list here is program-derived: pm.cnn_a_layers
+/ pm.mobilenet_layers re-derive from an abstract BinArrayProgram compile,
+and the xref rows read program.layer_stats() directly.  The
 ``table3_util_xref_*`` rows put both numbers side by side for the
 MobileNet-B2 layers so Table III rows and kernel_bench rows cross-reference:
 layers where the paper's PA utilization is high but our per-image row
@@ -56,39 +58,44 @@ def pa_utilization(cfg: pm.BinArrayConfig, layer: pm.ConvLayer,
                           * lanes), 1.0)
 
 
-# MobileNet-B2 layers to cross-reference (name, index into mobilenet_layers
-# (alpha=1, res=224): stem=0, dw_i=1+2i, pw_i=2+2i)
-XREF_LAYERS = [
-    ("stem_224", 0), ("pw0_112", 2), ("pw5_14", 12), ("pw11_7", 24),
-    ("pw12_7", 26),
-]
+# MobileNet-B2 layers to cross-reference, by layer name in the compiled
+# program (models/cnn.py MOBILENET_SPECS — the same names kernel_bench uses)
+XREF_LAYERS = ("stem", "pw0", "pw5", "pw11", "pw12")
 
 
 def utilization_xref_rows(B: int = 128):
     """Per-layer (paper PA utilization) × (our MXU row occupancy) rows for
     the Table III headline config BinArray[16, 32, 4] at M=4 (B = a bulk
-    serving batch — the pick minimizes the batch's total padded rows)."""
+    serving batch — the pick minimizes the batch's total padded rows).
+
+    Both columns read the same compiled program: the tile plans and
+    occupancies come straight from ``program.layer_stats()`` of an abstract
+    M=4 compile at batch B, and the paper-side ConvLayers are
+    ``pm.layers_from_program`` over the very same program."""
+    from repro import deploy
+    from repro.core.binlinear import QuantConfig
     from repro.kernels import binary_conv as bck
 
     cfg = pm.BinArrayConfig(16, 32, 4)
-    layers = pm.mobilenet_layers(alpha=1.0, resolution=224)
+    # m=4 matches the paper side: both columns describe the M=4 config
+    prog = deploy.abstract_program(
+        "mobilenet", QuantConfig(mode="binary", M=4, K_iters=1),
+        (B, 224, 224, 3))
+    stats = prog.layer_stats()
+    layers = pm.layers_from_stats(stats)
     rows = []
-    for name, idx in XREF_LAYERS:
-        lyr = layers[idx]
-        H = lyr.H_I + 2 * lyr.padding        # SAME-padded input rows
-        W = lyr.W_I + 2 * lyr.padding        # SAME-padded input cols
-        V = (W - lyr.W_B) // lyr.stride + 1
-        bd = min(128, lyr.D)
-        # m=4 matches the paper side: both columns describe the M=4 config
-        nb, bu = bck.pick_tile(B, H, W, lyr.C_I, lyr.H_B, lyr.W_B, bd,
-                               stride=lyr.stride, m=4)
-        occ1 = bck.mxu_row_occupancy(bck.gemm_rows(1, bu, V))
-        occ = bck.mxu_row_occupancy(bck.gemm_rows(nb, bu, V))
+    for s, lyr in zip(stats, layers):
+        if s["name"] not in XREF_LAYERS:
+            continue
+        plan = s["plan"]
+        V = s["out_shape"][2] * s["pool"]
+        occ1 = bck.mxu_row_occupancy(bck.gemm_rows(1, plan["bu"], V))
         rows.append((
-            f"table3_util_xref_{name}", 0.0,
+            f"table3_util_xref_{s['name']}_{s['in_shape'][1]}", 0.0,
             f"pa_util_paper={pa_utilization(cfg, lyr, 4):.2f} "
             f"mxu_row_occ_per_image={occ1:.2f} "
-            f"mxu_row_occ_batched={occ:.2f} nb={nb} bu={bu}"))
+            f"mxu_row_occ_batched={s['mxu_row_occupancy']:.2f} "
+            f"nb={plan['nb']} bu={plan['bu']}"))
     return rows
 
 

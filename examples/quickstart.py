@@ -5,19 +5,20 @@
 1. binarize a weight matrix with Algorithm 1 and the improved Algorithm 2;
 2. compare their residuals (the paper's central §II claim);
 3. run the binary dot product through the Pallas kernel vs the jnp oracle;
-4. binarize a whole (reduced) qwen3 model and serve one decode step;
-5. flip the runtime accuracy<->throughput switch (m_active, paper §IV-D).
+4. compile CNN-A into a BinArrayProgram (paper §IV: one macro-instruction
+   per layer, tile plans frozen offline) and execute it;
+5. flip the runtime accuracy<->throughput switch (m_active, §IV-D) — global
+   and per-layer — on the same compiled program.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import base as cb
+from repro import deploy
 from repro.core import binarize as bz
 from repro.core.binlinear import QuantConfig
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.models import api
+from repro.models import cnn
 
 
 def main():
@@ -44,22 +45,36 @@ def main():
     print(f"binary vs dense matmul MSE (M=2): "
           f"{float(jnp.mean((y_oracle - x @ W) ** 2)):.4f}")
 
-    # -- 4: whole-model deployment binarization ------------------------------
-    cfg = cb.reduced(cb.get_config("qwen3_14b")).replace(dtype="float32")
-    params = api.init_params(cfg, key)
-    qc = QuantConfig(mode="binary", M=4, K_iters=8)
-    bparams = api.binarize_model_params(cfg, params, qc=qc)
-    batch = {"tokens": jnp.array([[1, 2, 3, 4]], jnp.int32)}
-    dense_logits, _ = api.forward(cfg, params, batch)
+    # -- 4: compile once, execute many (paper §IV) ---------------------------
+    params = cnn.init_cnn_a(key)
+    qc = QuantConfig(mode="binary", M=2, K_iters=8, interpret=True)
+    program = deploy.compile(params, "cnn_a", qc, input_shape=(4, 48, 48, 3))
+    print("\ncompiled CNN-A instruction stream (frozen tile plans):")
+    for s in program.layer_stats():
+        plan = " ".join(f"{k}={v}" for k, v in s["plan"].items())
+        print(f"  {s['name']:<5} {s['kind']:<6} {plan:<22} "
+              f"macs={s['macs']:>9,} vmem_KB={s['vmem_bytes'] / 1024:>7.0f}")
+    print(f"  total: {program.totals()['macs']:,} MACs, "
+          f"{program.totals()['weight_bytes']:,} packed weight bytes")
 
-    # -- 5: runtime accuracy<->throughput switch -----------------------------
-    print("\nruntime m_active switch (same packed buffers):")
-    for m in (1, 2, 4):
-        bcfg = cfg.replace(quant=qc.replace(m_active=m))
-        lg, _ = api.forward(bcfg, bparams, batch)
+    xb = jax.random.normal(jax.random.PRNGKey(1), (4, 48, 48, 3), jnp.float32)
+    dense_logits = cnn.cnn_a_forward(params, xb)          # fp baseline
+    full = deploy.execute(program, xb)
+
+    # -- 5: runtime accuracy<->throughput switch on the compiled program -----
+    print("\nruntime m_active switch (same program, no recompilation):")
+    for m in (1, 2):
+        lg = deploy.execute(program, xb, m_active=m)
         mse = float(jnp.mean((lg - dense_logits) ** 2))
-        print(f"  m_active={m}: logits MSE vs dense = {mse:.5f} "
-              f"({'high-throughput' if m < 4 else 'high-accuracy'} mode)")
+        print(f"  m_active={m} (global):     logits MSE vs dense = {mse:.5f} "
+              f"({'high-throughput' if m < 2 else 'high-accuracy'} mode)")
+    sched = [1, 2, 2, 2, 2]   # cheap first conv, full levels elsewhere
+    lg = deploy.execute(program, xb, m_active=sched)
+    print(f"  schedule {sched}: logits MSE vs dense = "
+          f"{float(jnp.mean((lg - dense_logits) ** 2)):.5f} "
+          f"(per-layer §IV-D)")
+    print(f"  full-level program vs dense MSE = "
+          f"{float(jnp.mean((full - dense_logits) ** 2)):.5f}")
 
 
 if __name__ == "__main__":

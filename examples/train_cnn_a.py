@@ -86,14 +86,20 @@ def main():
           f"({time.time() - t0:.1f}s) — matches fake-quant: "
           f"{abs(acc_deploy - acc_rt) < 0.02}")
 
-    # fused implicit-GEMM conv path (no HBM im2col), interpret-mode spot check
-    fused_qc = QuantConfig(mode="binary", M=args.M, fuse_conv=True,
-                           use_pallas=True, interpret=True)
+    # compile the packed tree into a BinArrayProgram (paper §IV: tile plans
+    # frozen offline, zero per-call scheduling) and spot-check the fused
+    # kernels against the im2col reference path, interpret mode
+    from repro import deploy as dpl
+
+    program = dpl.compile(deploy, "cnn_a",
+                          QuantConfig(mode="binary", M=args.M, interpret=True),
+                          input_shape=(16, 48, 48, 3))
     lg_ref = cnn.cnn_a_forward(deploy, x_eval[:16],
                                QuantConfig(mode="binary", M=args.M))
-    lg_fused = cnn.cnn_a_forward(deploy, x_eval[:16], fused_qc)
+    lg_fused = dpl.execute(program, x_eval[:16])
     drift = float(jnp.max(jnp.abs(lg_fused - lg_ref)))
-    print(f"   fused conv kernel == im2col path: max |Δlogit| = {drift:.2e}")
+    print(f"   compiled program (fused kernels) == im2col path: "
+          f"max |Δlogit| = {drift:.2e}")
 
     arrays = lambda tree: (l for l in jax.tree.leaves(tree)
                            if hasattr(l, "size"))

@@ -28,7 +28,11 @@ def _flatten_with_paths(tree):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in leaves:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (custom pytree
+        # nodes, e.g. deploy.BinArrayProgram instructions) -> .name
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
         out[key] = leaf
     return out, treedef
 

@@ -160,20 +160,6 @@ def binarize_dwconv_params(params: dict, quant: QuantConfig) -> dict:
     return out
 
 
-_warned_legacy_repack = False
-
-
-def _reset_warnings() -> None:
-    """Re-arm the module's warn-once flags (test hook).
-
-    The legacy-repack warning fires once per process; a test that triggers
-    it would otherwise poison every later test's expectation of seeing (or
-    not seeing) the warning.  tests/conftest.py calls this around each test.
-    """
-    global _warned_legacy_repack
-    _warned_legacy_repack = False
-
-
 def ensure_tap_packed(params: dict, C: int) -> dict:
     """One-time weight-layout upgrade for legacy packed conv trees.
 
@@ -183,7 +169,10 @@ def ensure_tap_packed(params: dict, C: int) -> dict:
     layer's input channel count — it cannot be recovered from the packed
     bytes alone because each tap pads to a byte boundary); hitting the
     conversion inside a traced forward instead re-runs the repack every
-    call and warns once (see :func:`conv2d_relu_pool`).
+    call and raises a ``DeprecationWarning`` each time (see
+    :func:`conv2d_relu_pool`).  The deploy compiler (repro.deploy.compile)
+    calls this on legacy trees so a compiled program always carries
+    ``B_tap_packed``.
     """
     if "B_tap_packed" in params or "B_packed" not in params:
         return params
@@ -230,16 +219,15 @@ def conv2d_relu_pool(params: dict, x: jax.Array, *, stride: int = 1,
         if U % pool == 0 and V % pool == 0:
             tap = params.get("B_tap_packed")
             if tap is None:  # packed trees from before the fused kernel landed
-                global _warned_legacy_repack
-                if not _warned_legacy_repack:
-                    _warned_legacy_repack = True
-                    warnings.warn(
-                        "conv params carry only the flat B_packed layout; "
-                        "repack_taps is re-running inside the traced forward "
-                        "on every call.  Convert the tree once at load time "
-                        "with binconv.ensure_tap_packed(params, C) "
-                        "(binarize_conv_params emits B_tap_packed directly).",
-                        RuntimeWarning, stacklevel=2)
+                warnings.warn(
+                    "conv params carry only the flat B_packed layout; the "
+                    "per-call repack_taps path is deprecated and re-runs the "
+                    "repack inside the traced forward on EVERY call.  Convert "
+                    "the tree once at load time with "
+                    "binconv.ensure_tap_packed(params, C), or compile it into "
+                    "a BinArrayProgram (repro.deploy.compile) — both emit "
+                    "B_tap_packed directly.",
+                    DeprecationWarning, stacklevel=2)
                 from repro.kernels import binary_conv as bck
 
                 tap = bck.repack_taps(params["B_packed"], kh, kw, C)

@@ -20,6 +20,7 @@ N_LSA (Eq. 15).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 CLOCK_HZ = 400e6  # paper §V-B2: timing closure at 400 MHz on XC7Z045-2
@@ -135,38 +136,60 @@ def cpu_fps(layers, *, gops: float = 1e9) -> float:
 
 
 # ---------------------------------------------------------------------------
-# Reference networks (paper §V-A1) as layer lists
+# Reference networks (paper §V-A1) as layer lists — derived from the deploy
+# compiler's program.layer_stats(), not hand-maintained: the LayerSpec lists
+# in models/cnn.py are the single topology source of truth, and an abstract
+# compile (jax.eval_shape — no weights ever computed) turns them into the
+# same per-layer geometry this model consumes.
 # ---------------------------------------------------------------------------
 
+def _infer_pad(in_dim: int, k: int, stride: int, out_dim: int) -> int:
+    """Symmetric padding p with (in - k + 2p)//stride + 1 == out (Eq. 14)."""
+    for p in range(0, k + 1):
+        if (in_dim - k + 2 * p) // stride + 1 == out_dim:
+            return p
+    raise ValueError(f"no symmetric pad reproduces {in_dim}->{out_dim} "
+                     f"(k={k}, stride={stride})")
+
+
+def layers_from_stats(stats: list[dict]) -> list:
+    """program.layer_stats() -> [ConvLayer | DenseLayer] for Eq. 14-18."""
+    out = []
+    for s in stats:
+        if s["kind"] == "linear":
+            out.append(DenseLayer(s["K"], s["out_shape"][-1]))
+            continue
+        _, H, W, C = s["in_shape"]
+        U = s["out_shape"][1] * s.get("pool", 1)   # conv rows before the AMU
+        out.append(ConvLayer(
+            W_I=W, H_I=H, C_I=C, W_B=s["kw"], H_B=s["kh"],
+            D=s["out_shape"][-1], stride=s["stride"],
+            padding=_infer_pad(H, s["kh"], s["stride"], U),
+            depthwise=(s["kind"] == "dwconv")))
+    return out
+
+
+def layers_from_program(program) -> list:
+    """A compiled (or abstract) BinArrayProgram -> perf-model layer list."""
+    return layers_from_stats(program.layer_stats())
+
+
+@functools.lru_cache(maxsize=None)
+def _net_stats(arch: str, width_mult: float, resolution: int) -> tuple:
+    from repro import deploy  # deferred: core must not hard-depend on deploy
+    from repro.core.binlinear import QuantConfig
+
+    qc = QuantConfig(mode="binary", M=2, K_iters=1)
+    shape = ((1, 48, 48, 3) if arch == "cnn_a"
+             else (1, resolution, resolution, 3))
+    prog = deploy.abstract_program(arch, qc, shape, width_mult=width_mult)
+    return tuple(prog.layer_stats())
+
+
 def cnn_a_layers():
-    return [
-        ConvLayer(48, 48, 3, 7, 7, 5),
-        ConvLayer(21, 21, 5, 4, 4, 150),
-        DenseLayer(1350, 340),
-        DenseLayer(340, 490),
-        DenseLayer(490, 43),
-    ]
+    return layers_from_stats(list(_net_stats("cnn_a", 1.0, 48)))
 
 
 def mobilenet_layers(*, alpha: float = 1.0, resolution: int = 224):
     """MobileNetV1 (CNN-B1: alpha=.5 res=128; CNN-B2: alpha=1 res=224)."""
-    def c(ch):
-        return max(8, int(ch * alpha))
-
-    blocks = [(1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
-              (1, 512), (1, 512), (1, 512), (1, 512), (1, 512), (2, 1024),
-              (1, 1024)]
-    layers = []
-    r = resolution // 2
-    cin = c(32)
-    layers.append(ConvLayer(resolution, resolution, 3, 3, 3, cin, stride=2,
-                            padding=1))
-    for stride, cout in blocks:
-        cout = c(cout)
-        layers.append(ConvLayer(r, r, cin, 3, 3, cin, stride=stride,
-                                padding=1, depthwise=True))
-        r = r // stride
-        layers.append(ConvLayer(r, r, cin, 1, 1, cout))
-        cin = cout
-    layers.append(DenseLayer(cin, 1000))
-    return layers
+    return layers_from_stats(list(_net_stats("mobilenet", alpha, resolution)))

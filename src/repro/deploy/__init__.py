@@ -1,0 +1,22 @@
+"""Compile-once deployment API (paper §IV: compiler + instruction stream).
+
+    from repro import deploy
+
+    program = deploy.compile(params, "cnn_a", quant, input_shape=(8, 48, 48, 3))
+    logits = deploy.execute(program, x)                  # all packed levels
+    logits = deploy.execute(program, x, m_active=1)      # §IV-D global switch
+    logits = deploy.execute(program, x, m_active=[1, 2, 2, 2, 2])  # per-layer
+
+See docs/deploy.md for the compile → inspect → execute lifecycle.
+"""
+from repro.deploy.compiler import (abstract_program, compile, load_program,
+                                   save_program)
+from repro.deploy.executor import execute
+from repro.deploy.program import (BinArrayProgram, ConvInstr, DWConvInstr,
+                                  LayerStats, LinearInstr, TilePlan)
+
+__all__ = [
+    "BinArrayProgram", "ConvInstr", "DWConvInstr", "LinearInstr",
+    "LayerStats", "TilePlan", "abstract_program", "compile", "execute",
+    "load_program", "save_program",
+]

@@ -1,0 +1,273 @@
+"""compile(): layer params + arch spec -> BinArrayProgram (paper §IV).
+
+The compiler does everything that is static, ONCE, ahead of deployment:
+
+  1. **Pack** — fp trees are binarized (Algorithm 2) into the kernels'
+     packed layouts; already-packed trees are reused as-is, and legacy
+     trees that predate the fused conv kernel are upgraded through
+     ``binconv.ensure_tap_packed`` so every emitted ``ConvInstr`` carries
+     ``B_tap_packed`` (the per-call ``repack_taps`` path is retired).
+  2. **Plan** — the exact tile auto-picks the per-call paths run on every
+     trace (``pick_tile`` / ``pick_tile_dw`` / ``pick_matmul_plan``) run
+     here instead, against the compile-time ``input_shape``, and freeze
+     into each instruction's :class:`~repro.deploy.program.TilePlan`.
+     Using the same pick functions is what makes ``execute`` bit-exact
+     against the legacy ``QuantConfig.fuse_conv`` forwards.
+  3. **Account** — per-layer VMEM working sets, fused-vs-im2col HBM bytes,
+     MAC counts, and MXU row occupancy land in :class:`LayerStats`, so the
+     benchmarks read ``program.layer_stats()`` instead of hand-maintained
+     layer lists.
+
+``compile`` is pure JAX: run it under ``jax.eval_shape`` (see
+:func:`abstract_program`) and you get the full program — real plans, real
+stats — with ShapeDtypeStruct weights, for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binconv
+from repro.core import binlinear as bl
+from repro.core.binlinear import QuantConfig
+from repro.deploy.program import (BinArrayProgram, ConvInstr, DWConvInstr,
+                                  LayerStats, LinearInstr, TilePlan)
+from repro.kernels import binary_conv as bck
+from repro.kernels import binary_dwconv as bdw
+from repro.kernels import ops as kops
+from repro.models import cnn
+
+ARCHS = ("cnn_a", "mobilenet")
+
+
+def _specs(arch: str):
+    if arch == "cnn_a":
+        return cnn.cnn_a_specs()
+    if arch == "mobilenet":
+        return cnn.mobilenet_specs()
+    raise ValueError(f"unknown arch {arch!r}; expected one of {ARCHS}")
+
+
+def _bias(p: dict, n: int) -> jax.Array:
+    b = p.get("b")
+    if b is None:
+        return jnp.zeros((n,), jnp.float32)
+    return b.astype(jnp.float32)
+
+
+def _compile_conv(spec, p, shape, quant):
+    """One conv spec -> (ConvInstr, out_shape)."""
+    if "B_packed" not in p and "B_tap_packed" not in p:
+        p = binconv.binarize_conv_params(p, quant)
+    B, H, W, C = shape
+    p = binconv.ensure_tap_packed(p, C)      # legacy flat-only trees upgrade
+    tap = p["B_tap_packed"]
+    M, T, C8, D = tap.shape
+    kh, kw = spec.kh, spec.kw
+    assert T == kh * kw, (spec.name, T, kh, kw)
+    if spec.padding == "SAME":
+        (pt, pb) = binconv.same_pads(H, kh, spec.stride)
+        (pl, pr) = binconv.same_pads(W, kw, spec.stride)
+        Hp, Wp = H + pt + pb, W + pl + pr
+    else:
+        Hp, Wp = H, W
+    U = (Hp - kh) // spec.stride + 1
+    V = (Wp - kw) // spec.stride + 1
+    if U % spec.pool or V % spec.pool:
+        raise ValueError(
+            f"{spec.name}: conv output {U}x{V} not divisible by AMU pool "
+            f"{spec.pool} (paper §III-B: downsampling only)")
+    G = p["alpha"].shape[1]
+    group_size = kh * kw * C // G
+    m_plan = min(quant.m_active or M, M)
+    budget = quant.conv_vmem_budget or bck.DEFAULT_VMEM_BUDGET
+
+    bd = kops._pick_block(D, 128)
+    if quant.conv_batch_tile is not None:
+        nb = max(1, min(quant.conv_batch_tile, B))
+        bu = bck.pick_bu(Hp, Wp, C, kh, kw, bd, spec.pool, budget,
+                         stride=spec.stride, m=m_plan, nb=nb)
+    else:
+        nb, bu = bck.pick_tile(B, Hp, Wp, C, kh, kw, bd, spec.pool, budget,
+                               stride=spec.stride, m=m_plan)
+
+    uo = U // spec.pool
+    fused, im2col = bck.tile_hbm_bytes(
+        Wp, C, kh, kw, min(bd, D), bu=bu, pool=spec.pool, stride=spec.stride,
+        m=M, nb=nb, H=Hp)
+    rows_img = bck.gemm_rows(1, bu, V, pool=spec.pool)
+    stats = LayerStats(
+        in_shape=(B, H, W, C),
+        out_shape=(B, uo, V // spec.pool, D),
+        padded_in=(Hp, Wp),
+        macs=U * V * D * kh * kw * C,
+        weight_bytes=int(tap.size) + int(p["alpha"].size) * 4,
+        vmem_bytes=bck.tile_vmem_bytes(
+            Wp, C, kh, kw, bd, bu=bu, pool=spec.pool, stride=spec.stride,
+            m=m_plan, nb=nb),
+        hbm_fused_bytes=fused, hbm_im2col_bytes=im2col,
+        mxu_row_occupancy=bck.mxu_row_occupancy(
+            bck.gemm_rows(nb, bu, V, pool=spec.pool)),
+        batch_row_utilization=(bck.batch_row_utilization(B, nb, rows_img)
+                               if bu == uo else bck.mxu_row_occupancy(
+                                   bck.gemm_rows(nb, bu, V, pool=spec.pool))),
+    )
+    instr = ConvInstr(
+        B_tap_packed=tap, alpha=p["alpha"], bias=_bias(p, D),
+        name=spec.name, kh=kh, kw=kw, stride=spec.stride,
+        padding=spec.padding, pool=spec.pool, relu=spec.relu, pre=spec.pre,
+        M=M, group_size=group_size,
+        plan=TilePlan(nb=nb, bu=bu, bd=bd), stats=stats)
+    return instr, stats.out_shape
+
+
+def _compile_dwconv(spec, p, shape, quant):
+    """One depth-wise spec -> (DWConvInstr, out_shape).  Always SAME."""
+    if "B_tap_packed" not in p:
+        p = binconv.binarize_dwconv_params(p, quant)
+    B, H, W, C = shape
+    tap = p["B_tap_packed"]
+    M, T, c8 = tap.shape
+    kh, kw = spec.kh, spec.kw
+    assert T == kh * kw and c8 * 8 >= C, (spec.name, tap.shape, C)
+    (pt, pb) = binconv.same_pads(H, kh, spec.stride)
+    (pl, pr) = binconv.same_pads(W, kw, spec.stride)
+    Hp, Wp = H + pt + pb, W + pl + pr
+    U = (Hp - kh) // spec.stride + 1
+    V = (Wp - kw) // spec.stride + 1
+    m_plan = min(quant.m_active or M, M)
+    budget = quant.conv_vmem_budget or bck.DEFAULT_VMEM_BUDGET
+    if quant.conv_batch_tile is not None:
+        nb = max(1, min(quant.conv_batch_tile, B))
+        bu = bdw.pick_bu_dw(Hp, Wp, C, kh, kw, budget, stride=spec.stride,
+                            m=m_plan, nb=nb)
+    else:
+        nb, bu = bdw.pick_tile_dw(B, Hp, Wp, C, kh, kw, budget,
+                                  stride=spec.stride, m=m_plan)
+    stats = LayerStats(
+        in_shape=(B, H, W, C), out_shape=(B, U, V, C), padded_in=(Hp, Wp),
+        macs=U * V * C * kh * kw,
+        weight_bytes=int(tap.size) + int(p["alpha"].size) * 4,
+        vmem_bytes=bdw.tile_vmem_bytes_dw(
+            Wp, C, kh, kw, bu=bu, stride=spec.stride, m=m_plan, nb=nb),
+    )
+    instr = DWConvInstr(
+        B_tap_packed=tap, alpha=p["alpha"], bias=_bias(p, C),
+        name=spec.name, kh=kh, kw=kw, stride=spec.stride, relu=spec.relu,
+        pre=spec.pre, M=M, plan=TilePlan(nb=nb, bu=bu), stats=stats)
+    return instr, stats.out_shape
+
+
+def _compile_linear(spec, p, shape, quant):
+    """One linear spec -> (LinearInstr, out_shape)."""
+    if "B_packed" not in p:
+        p = bl.binarize_params(p, quant)
+    B = shape[0]
+    if spec.pre == "flatten":
+        K = 1
+        for d in shape[1:]:
+            K *= d
+    else:  # "gap" (channels survive the mean) or "none" (already [B, K])
+        K = shape[-1]
+    M, K8, N = p["B_packed"].shape
+    G = p["alpha"].shape[1]
+    group_size = K // G
+    bt, bn, bk = kops.pick_matmul_plan(B, K, N, G=G, group_size=group_size)
+    # per-tile working set of the matmul kernel: x block + packed weight
+    # block + fp32 accumulator (kernels/binary_matmul.py blocking)
+    vmem = bt * bk * 4 + M * (bk // 8) * bn + bt * bn * 4
+    stats = LayerStats(
+        in_shape=(B, K), out_shape=(B, N),
+        macs=K * N,
+        weight_bytes=int(p["B_packed"].size) + int(p["alpha"].size) * 4,
+        vmem_bytes=vmem,
+    )
+    instr = LinearInstr(
+        B_packed=p["B_packed"], alpha=p["alpha"], bias=_bias(p, N),
+        name=spec.name, K=K, relu=spec.relu, pre=spec.pre, M=M,
+        group_size=group_size, plan=TilePlan(bt=bt, bn=bn, bk=bk),
+        stats=stats)
+    return instr, stats.out_shape
+
+
+def compile(params: dict, arch: str, quant: QuantConfig,
+            input_shape: tuple[int, ...]) -> BinArrayProgram:
+    """Compile a network into a :class:`BinArrayProgram`.
+
+    params:      fp tree (binarized here with ``quant``), a packed tree from
+                 ``binarize_cnn_a`` / ``binarize_mobilenet`` (reused as-is),
+                 or a legacy packed tree without ``B_tap_packed`` (upgraded).
+    arch:        "cnn_a" | "mobilenet" — selects the LayerSpec list in
+                 models/cnn.py (the single topology source of truth).
+    quant:       packing config (M, algorithm, K_iters, group_size) plus the
+                 compile-time knobs: ``m_active`` biases the VMEM plan,
+                 ``conv_batch_tile`` / ``conv_vmem_budget`` override the
+                 auto pick, ``interpret`` sets the program's default Pallas
+                 interpret flag.
+    input_shape: (B, H, W, C) the tile plans are optimized for.
+
+    All scheduling (``pick_tile`` / ``pick_tile_dw`` / ``pick_matmul_plan``)
+    happens HERE — ``execute`` runs zero plan picks inside its trace
+    (``kernels.binary_conv.plan_pick_count`` proves it).
+    """
+    if len(input_shape) != 4:
+        raise ValueError(f"input_shape must be (B, H, W, C): {input_shape}")
+    specs = _specs(arch)
+    shape: tuple[int, ...] = tuple(int(d) for d in input_shape)
+    instrs = []
+    for spec in specs:
+        p = params[spec.name]
+        if spec.kind == "conv":
+            instr, shape = _compile_conv(spec, p, shape, quant)
+        elif spec.kind == "dwconv":
+            instr, shape = _compile_dwconv(spec, p, shape, quant)
+        else:
+            instr, shape = _compile_linear(spec, p, shape, quant)
+        instrs.append(instr)
+    return BinArrayProgram(
+        instrs=tuple(instrs), arch=arch,
+        input_shape=tuple(int(d) for d in input_shape),
+        interpret=quant.interpret)
+
+
+def abstract_program(arch: str, quant: QuantConfig,
+                     input_shape: tuple[int, ...], *,
+                     width_mult: float = 1.0,
+                     n_classes: int = 1000) -> BinArrayProgram:
+    """Compile without computing: init + binarize + plan under
+    ``jax.eval_shape``.  The returned program carries the *real* frozen tile
+    plans and LayerStats (they are static aux data) with ShapeDtypeStruct
+    weight leaves — this is what the benchmarks and ``run.py --json``
+    introspect, and the restore target for checkpoint round-trips."""
+
+    def build(key):
+        if arch == "cnn_a":
+            p = cnn.init_cnn_a(key)
+        else:
+            p = cnn.init_mobilenet(key, width_mult=width_mult,
+                                   n_classes=n_classes)
+        return compile(p, arch, quant, input_shape)
+
+    return jax.eval_shape(build, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip (checkpoint/manager.py)
+# ---------------------------------------------------------------------------
+
+def save_program(manager, step: int, program: BinArrayProgram, *,
+                 extra: dict | None = None) -> str:
+    """Persist a compiled program (packed weights; plans/stats ride in the
+    pytree structure, which the restore target re-supplies)."""
+    meta = {"deploy": program.totals()}
+    meta.update(extra or {})
+    return manager.save(step, {"program": program}, extra=meta)
+
+
+def load_program(manager, step: int, like: BinArrayProgram) -> BinArrayProgram:
+    """Restore a program saved with :func:`save_program`.  ``like`` supplies
+    the structure + plans — typically :func:`abstract_program` with the same
+    arch/quant/input_shape (compilation is deterministic, so the treedefs
+    match) or any same-shaped compiled program."""
+    restored, _ = manager.restore(step, {"program": like})
+    return restored["program"]

@@ -137,6 +137,29 @@ DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
 # padded to a multiple of this, so occupancy = rows / roundup(rows, 128).
 MXU_ROWS = 128
 
+# ---------------------------------------------------------------------------
+# Plan-pick accounting: every tile/block auto-pick bumps this counter, so the
+# deploy tier can *prove* that a compiled BinArrayProgram runs zero scheduling
+# decisions inside the jitted execute trace (repro/deploy — plans are frozen
+# at compile time).  The legacy per-call paths (binconv.conv2d_relu_pool etc.)
+# still auto-pick on every trace, which is exactly what the counter exposes.
+# ---------------------------------------------------------------------------
+
+_plan_picks = [0]
+
+
+def _note_plan_pick() -> None:
+    _plan_picks[0] += 1
+
+
+def plan_pick_count() -> int:
+    """Process-wide count of tile/block auto-picks (any kernel)."""
+    return _plan_picks[0]
+
+
+def reset_plan_pick_count() -> None:
+    _plan_picks[0] = 0
+
 
 def pack_taps(B: jax.Array, kh: int, kw: int, C: int) -> jax.Array:
     """±1 int8 [M, kh*kw*C, D] -> per-tap packed [M, kh*kw, ceil(C/8), D].
@@ -245,6 +268,37 @@ def tile_vmem_bytes(W: int, C: int, kh: int, kw: int, bd: int, *, bu: int,
     return x_b + patches + w_packed + w_cat + acc + out
 
 
+def tile_hbm_bytes(W: int, C: int, kh: int, kw: int, bd: int, *, bu: int,
+                   pool: int = 1, stride: int = 1, m: int = 1, nb: int = 1,
+                   H: int | None = None) -> tuple[int, int]:
+    """Analytic HBM bytes one (batch-tile, D-tile, row-tile) program moves:
+    ``(fused, im2col)`` for fp32 activations.
+
+    fused: read the NB input row-slabs (halo included, clipped to the image
+    height ``H`` when given) + the bit-packed per-tap weight tile, write the
+    *pooled* output tile — the patch tensor lives only in VMEM.  im2col
+    (core/binconv.py conv2d + relu_maxpool): additionally writes the tile's
+    ``[nb·u·V, kh·kw·C]`` patch slice to HBM and reads it back for the
+    matmul, then writes the unpooled conv output and re-reads it for
+    pooling.  Shared by benchmarks/kernel_bench.py and the deploy compiler's
+    per-layer stats so neither can drift from the BlockSpec reality.
+    """
+    V = (W - kw) // stride + 1
+    u_tile = bu * pool
+    slab = slab_rows(bu, kh, stride=stride, pool=pool)
+    if H is not None:
+        slab = min(slab, H)
+    c8 = -(-C // 8)
+    x_b = nb * slab * W * C * 4
+    w_packed = m * kh * kw * c8 * bd
+    out_pooled = nb * bu * (V // pool) * bd * 4
+    out_unpooled = nb * u_tile * V * bd * 4
+    patches = nb * u_tile * V * kh * kw * C * 4
+    fused = x_b + w_packed + out_pooled
+    im2col = x_b + 2 * patches + w_packed + out_unpooled * 2 + out_pooled
+    return fused, im2col
+
+
 def pick_bu(H: int, W: int, C: int, kh: int, kw: int, bd: int,
             pool: int = 1, budget_bytes: int = DEFAULT_VMEM_BUDGET, *,
             stride: int = 1, m: int = 1, nb: int = 1) -> int:
@@ -257,6 +311,7 @@ def pick_bu(H: int, W: int, C: int, kh: int, kw: int, bd: int,
     that exceeds the budget the kernel still runs — the budget is a target,
     not a hard VMEM limit).
     """
+    _note_plan_pick()
     U = (H - kh) // stride + 1
     uo = max(U // pool, 1)
     for bu in range(uo, 1, -1):
@@ -291,6 +346,7 @@ def pick_tile(B: int, H: int, W: int, C: int, kh: int, kw: int, bd: int,
     produces bit-identical outputs — tiling is a throughput decision, never
     an accuracy one.
     """
+    _note_plan_pick()
     U = (H - kh) // stride + 1
     V = (W - kw) // stride + 1
     uo = max(U // pool, 1)

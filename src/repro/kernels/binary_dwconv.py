@@ -59,7 +59,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import binarize as bz
-from repro.kernels.binary_conv import DEFAULT_VMEM_BUDGET, slab_rows
+from repro.kernels.binary_conv import (DEFAULT_VMEM_BUDGET, _note_plan_pick,
+                                       slab_rows)
 
 
 def pack_dw_taps(B: jax.Array) -> jax.Array:
@@ -103,6 +104,7 @@ def pick_bu_dw(H: int, W: int, C: int, kh: int, kw: int,
                stride: int = 1, m: int = 1, nb: int = 1) -> int:
     """Largest dw row tile (output rows per program) fitting the budget at a
     fixed batch tile ``nb``."""
+    _note_plan_pick()
     U = (H - kh) // stride + 1
     for bu in range(max(U, 1), 1, -1):
         if tile_vmem_bytes_dw(W, C, kh, kw, bu=bu, stride=stride,
@@ -122,6 +124,7 @@ def pick_tile_dw(B: int, H: int, W: int, C: int, kh: int, kw: int,
     (the VPU has no 128-row dimension to fill — past a handful of images
     the unpack/dispatch amortization has flattened out).
     """
+    _note_plan_pick()
     U = (H - kh) // stride + 1
     bu = pick_bu_dw(H, W, C, kh, kw, budget_bytes, stride=stride, m=m)
     if bu < max(U, 1) or B <= 1:

@@ -18,10 +18,39 @@ from repro.kernels import binary_matmul as bmk
 
 def _pick_block(dim: int, preferred: int) -> int:
     """Largest power-of-two block <= preferred that keeps padding sane."""
+    bck._note_plan_pick()
     b = preferred
     while b > dim and b > 8:
         b //= 2
     return max(b, 8)
+
+
+def pick_matmul_plan(T: int, K: int, N: int, *, G: int,
+                     group_size: int) -> tuple[int, int, int]:
+    """The (bt, bn, bk) block plan ``binary_matmul`` auto-picks for a
+    ``[T, K] @ [K, N]`` binary matmul with G alpha groups.
+
+    Exported so the deploy compiler (repro/deploy) can freeze the *same*
+    blocks at compile time that the per-call path would pick — identical
+    blocks mean an identical K-reduction order, which is what makes
+    compiled-program execution bit-exact against the legacy path.
+    """
+    K8 = -(-K // 8)
+    bt = _pick_block(T, 128)
+    bn = _pick_block(N, 128)
+    # bk must divide group_size (or G == 1); cap at 256 for VMEM
+    if G == 1:
+        bk = _pick_block(K8 * 8, 256)
+    elif group_size % 8 == 0:
+        bk = _pick_block(group_size, 256)
+        while group_size % bk and bk > 8:
+            bk //= 2  # terminates at a legal divisor: 8 | group_size
+    else:
+        # group_size % 8 != 0: no multiple-of-8 K tile can align with group
+        # boundaries, so take the kernel's single-block grouped-alpha path
+        # (whole padded K in one block, alpha folded in per row).
+        bk = K8 * 8
+    return bt, bn, bk
 
 
 def binary_matmul(
@@ -45,21 +74,10 @@ def binary_matmul(
     x2 = x.reshape(T, K)
     M, K8, N = B_packed.shape
 
-    bt = bt or _pick_block(T, 128)
-    bn = bn or _pick_block(N, 128)
-    # bk must divide group_size (or G == 1); cap at 256 for VMEM
-    if alpha.shape[1] == 1:
-        bk = bk or _pick_block(K8 * 8, 256)
-    elif group_size % 8 == 0:
-        if bk is None:
-            bk = _pick_block(group_size, 256)
-            while group_size % bk and bk > 8:
-                bk //= 2  # terminates at a legal divisor: 8 | group_size
-    else:
-        # group_size % 8 != 0: no multiple-of-8 K tile can align with group
-        # boundaries, so take the kernel's single-block grouped-alpha path
-        # (whole padded K in one block, alpha folded in per row).
-        bk = bk or K8 * 8
+    if bt is None or bn is None or bk is None:
+        pbt, pbn, pbk = pick_matmul_plan(T, K, N, G=alpha.shape[1],
+                                         group_size=group_size)
+        bt, bn, bk = bt or pbt, bn or pbn, bk or pbk
     y = bmk.binary_matmul_pallas(
         x2, B_packed, alpha, K=K, group_size=group_size,
         m_active=m_active, bt=bt, bn=bn, bk=bk, interpret=interpret,

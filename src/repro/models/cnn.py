@@ -8,8 +8,23 @@ baseline), fake-quant (retraining), or packed-binary (deployment) — exactly
 the paper's evaluation axes in Table II.  The max-pool layers use the fused
 AMU epilogue.  Depth-wise layers of MobileNet are approximated channel-wise
 (paper §V-A1: "a single convolution filter").
+
+Layer topology lives in ONE place: the :class:`LayerSpec` lists returned by
+``cnn_a_specs()`` / ``mobilenet_specs()``.  Everything that needs the network
+structure walks the same list —
+
+  * ``cnn_a_forward`` / ``mobilenet_forward``: thin spec-driven loops over
+    ``binconv.conv2d_relu_pool`` / ``binconv.depthwise_relu`` /
+    ``bl.apply_linear`` (dense, fake-quant, and per-call binary paths);
+  * ``binarize_cnn_a`` / ``binarize_mobilenet``: offline packing per spec;
+  * the deploy compiler (``repro.deploy.compile``): turns each spec + its
+    packed params into a macro-instruction with a frozen tile plan (paper
+    §IV: the compiler emits one instruction per layer and the accelerator
+    merely executes the stream).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +32,74 @@ import jax.numpy as jnp
 from repro.core import binconv
 from repro.core import binlinear as bl
 from repro.core.binlinear import QuantConfig, DENSE
-from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Static description of one layer — the single source of truth the
+    forwards, the offline binarizers, and the deploy compiler all walk.
+
+    ``pre`` is the activation epilogue *before* this layer ("flatten" for
+    conv->dense, "gap" for MobileNet's global average pool — offloaded to
+    the CPU in the paper); ``pool``/``relu`` describe the AMU epilogue after
+    it.  Weight shapes are carried by the params tree, not the spec, so one
+    spec list serves every width multiplier.
+    """
+
+    name: str
+    kind: str                 # conv | dwconv | linear
+    kh: int = 1
+    kw: int = 1
+    stride: int = 1
+    padding: str = "VALID"    # conv only; dw layers are always SAME
+    pool: int = 1             # AMU max-pool window (1 = no pooling)
+    pre: str = "none"         # none | flatten | gap
+    relu: bool = True
+
+
+def apply_pre(pre: str, y: jax.Array) -> jax.Array:
+    """A spec's pre-layer activation transform (shared with the deploy
+    executor so both paths stay literally the same computation)."""
+    if pre == "flatten":
+        return y.reshape(y.shape[0], -1)
+    if pre == "gap":
+        return jnp.mean(y, axis=(1, 2))
+    if pre != "none":
+        raise ValueError(f"unknown pre-op {pre!r}")
+    return y
+
+
+def _forward(specs, params, x: jax.Array, quant: QuantConfig) -> jax.Array:
+    """Spec-driven forward: dense / fake-quant / per-call binary paths."""
+    y = x
+    for s in specs:
+        y = apply_pre(s.pre, y)
+        if s.kind == "conv":
+            y = binconv.conv2d_relu_pool(
+                params[s.name], y, stride=s.stride, padding=s.padding,
+                pool=s.pool, quant=quant)
+        elif s.kind == "dwconv":
+            y = binconv.depthwise_relu(params[s.name], y, stride=s.stride,
+                                       quant=quant)
+        else:
+            y = bl.apply_linear(params[s.name], y, quant)
+            if s.relu:
+                y = jax.nn.relu(y)
+    return y
+
+
+def _binarize(specs, params, quant: QuantConfig) -> dict:
+    """Spec-driven offline conversion to packed-binary deployment form."""
+    out = {}
+    for s in specs:
+        if s.kind == "conv":
+            out[s.name] = binconv.binarize_conv_params(params[s.name], quant)
+        elif s.kind == "dwconv":
+            out[s.name] = binconv.binarize_dwconv_params(params[s.name], quant)
+        else:
+            out[s.name] = bl.binarize_params(params[s.name], quant)
+    return out
+
 
 # ---------------------------------------------------------------------------
 # CNN-A (paper: 9M MACs, GTSRB 43 classes, input 48x48x3)
@@ -25,6 +107,20 @@ from repro.models import common as cm
 
 CNN_A_INPUT = (48, 48, 3)
 CNN_A_CLASSES = 43
+
+# conv1 7x7 VALID -> 42x42x5, AMU pool 2 -> 21x21x5
+# conv2 4x4 VALID -> 18x18x150, AMU pool 6 -> 3x3x150 = 1350 -> 340 -> 490 -> 43
+CNN_A_SPECS = (
+    LayerSpec("conv1", "conv", kh=7, kw=7, pool=2),
+    LayerSpec("conv2", "conv", kh=4, kw=4, pool=6),
+    LayerSpec("fc1", "linear", pre="flatten"),
+    LayerSpec("fc2", "linear"),
+    LayerSpec("fc3", "linear", relu=False),
+)
+
+
+def cnn_a_specs() -> tuple[LayerSpec, ...]:
+    return CNN_A_SPECS
 
 
 def init_cnn_a(key, dtype=jnp.float32):
@@ -45,33 +141,22 @@ def init_cnn_a(key, dtype=jnp.float32):
 
 
 def cnn_a_forward(params, x: jax.Array, quant: QuantConfig = DENSE) -> jax.Array:
-    """x: [B, 48, 48, 3] -> logits [B, 43].
-
-    conv1 7x7 VALID -> 42x42x5, AMU pool 2 -> 21x21x5
-    conv2 4x4 VALID -> 18x18x150, AMU pool 6 -> 3x3x150 = 1350
+    """x: [B, 48, 48, 3] -> logits [B, 43], walking ``CNN_A_SPECS``.
 
     Each conv+pool stage goes through conv2d_relu_pool, so a binary
     deployment with quant.fuse_conv runs the fused implicit-GEMM kernel —
     conv2's small (3x3 pooled) output map is where the kernel's batch tile
-    folds several images per program to fill the MXU rows
-    (quant.conv_batch_tile overrides the auto pick).
+    folds several images per program to fill the MXU rows.  For zero
+    per-call planning, compile the packed tree into a ``BinArrayProgram``
+    instead (``repro.deploy.compile``) — this wrapper stays for the
+    dense/fake-quant training paths and per-call binary compatibility.
     """
-    y = binconv.conv2d_relu_pool(params["conv1"], x, pool=2, quant=quant)
-    y = binconv.conv2d_relu_pool(params["conv2"], y, pool=6, quant=quant)
-    y = y.reshape(y.shape[0], -1)
-    y = jax.nn.relu(bl.apply_linear(params["fc1"], y, quant))
-    y = jax.nn.relu(bl.apply_linear(params["fc2"], y, quant))
-    return bl.apply_linear(params["fc3"], y, quant)
+    return _forward(CNN_A_SPECS, params, x, quant)
 
 
 def binarize_cnn_a(params, quant: QuantConfig):
     """Offline conversion of every layer to packed-binary deployment form."""
-    out = {}
-    for name in ("conv1", "conv2"):
-        out[name] = binconv.binarize_conv_params(params[name], quant)
-    for name in ("fc1", "fc2", "fc3"):
-        out[name] = bl.binarize_params(params[name], quant)
-    return out
+    return _binarize(CNN_A_SPECS, params, quant)
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +168,21 @@ MOBILENET_BLOCKS = [
     (1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
     (1, 512), (1, 512), (1, 512), (1, 512), (1, 512), (2, 1024), (1, 1024),
 ]
+
+MOBILENET_SPECS = (
+    (LayerSpec("stem", "conv", kh=3, kw=3, stride=2, padding="SAME"),)
+    + tuple(
+        spec
+        for i, (stride, _) in enumerate(MOBILENET_BLOCKS)
+        for spec in (LayerSpec(f"dw{i}", "dwconv", kh=3, kw=3, stride=stride),
+                     LayerSpec(f"pw{i}", "conv", kh=1, kw=1))
+    )
+    + (LayerSpec("head", "linear", pre="gap", relu=False),)
+)
+
+
+def mobilenet_specs() -> tuple[LayerSpec, ...]:
+    return MOBILENET_SPECS
 
 
 def init_mobilenet(key, *, width_mult: float = 1.0, n_classes: int = 1000,
@@ -113,23 +213,17 @@ def init_mobilenet(key, *, width_mult: float = 1.0, n_classes: int = 1000,
 
 
 def mobilenet_forward(params, x: jax.Array, quant: QuantConfig = DENSE):
-    """x: [B, R, R, 3] -> logits.  Point-wise convs carry the binary matmuls;
-    depth-wise convs are memory-bound and approximated channel-wise (paper
-    §V-A3: D_arch=1 there).  With a packed tree (``binarize_mobilenet``) and
-    ``quant.fuse_conv`` + ``use_pallas`` the whole dw->pw stack runs the
-    fused binary kernels — zero fp ``lax.conv`` calls end to end.  The
-    back-half 14²/7² point-wise layers are where the kernels' (NB, BU)
-    batch tiling folds images per program to keep the MXU rows full
-    (``quant.conv_batch_tile`` / ``conv_vmem_budget`` override the auto
-    pick)."""
-    y = binconv.conv2d_relu_pool(params["stem"], x, stride=2, padding="SAME",
-                                 pool=1, quant=quant)
-    for i, (stride, _) in enumerate(MOBILENET_BLOCKS):
-        y = binconv.depthwise_relu(params[f"dw{i}"], y, stride=stride,
-                                   quant=quant)
-        y = binconv.conv2d_relu_pool(params[f"pw{i}"], y, pool=1, quant=quant)
-    y = jnp.mean(y, axis=(1, 2))  # global average pool (offloaded to CPU in paper)
-    return bl.apply_linear(params["head"], y, quant)
+    """x: [B, R, R, 3] -> logits, walking ``MOBILENET_SPECS``.  Point-wise
+    convs carry the binary matmuls; depth-wise convs are memory-bound and
+    approximated channel-wise (paper §V-A3: D_arch=1 there).  With a packed
+    tree (``binarize_mobilenet``) and ``quant.fuse_conv`` + ``use_pallas``
+    the whole dw->pw stack runs the fused binary kernels — zero fp
+    ``lax.conv`` calls end to end.  The back-half 14²/7² point-wise layers
+    are where the kernels' (NB, BU) batch tiling folds images per program to
+    keep the MXU rows full (``quant.conv_batch_tile`` / ``conv_vmem_budget``
+    override the auto pick; ``repro.deploy.compile`` freezes the pick
+    offline)."""
+    return _forward(MOBILENET_SPECS, params, x, quant)
 
 
 def binarize_mobilenet(params, quant: QuantConfig):
@@ -138,12 +232,7 @@ def binarize_mobilenet(params, quant: QuantConfig):
     stem/point-wise convs use the grouped conv packing (B_packed +
     B_tap_packed); depth-wise layers use the channel-wise dw packing
     (paper §V-A3); the classifier head packs like any linear."""
-    out = {"stem": binconv.binarize_conv_params(params["stem"], quant)}
-    for i in range(len(MOBILENET_BLOCKS)):
-        out[f"dw{i}"] = binconv.binarize_dwconv_params(params[f"dw{i}"], quant)
-        out[f"pw{i}"] = binconv.binarize_conv_params(params[f"pw{i}"], quant)
-    out["head"] = bl.binarize_params(params["head"], quant)
-    return out
+    return _binarize(MOBILENET_SPECS, params, quant)
 
 
 def cnn_a_macs() -> int:

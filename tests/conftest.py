@@ -35,13 +35,3 @@ import pytest
 def _clear_jax_caches_between_modules():
     yield
     jax.clear_caches()
-
-
-@pytest.fixture(autouse=True)
-def _reset_binconv_warn_once():
-    """Re-arm core.binconv's warn-once flags per test: a test that triggers
-    the legacy-repack warning must not suppress it for every later test."""
-    from repro.core import binconv
-
-    binconv._reset_warnings()
-    yield

@@ -84,22 +84,23 @@ class TestFusedBinaryConvKernel:
         np.testing.assert_array_equal(np.asarray(via_repack),
                                       np.asarray(p["B_tap_packed"]))
 
-    def test_legacy_packed_tree_warns_once_and_matches(self):
-        """A tree without B_tap_packed still runs fused (warn-once repack);
-        ensure_tap_packed upgrades it to the silent fast path."""
+    def test_legacy_packed_tree_deprecation_warns_every_call(self):
+        """The retired per-call repack path: a tree without B_tap_packed
+        still runs fused but raises a hard DeprecationWarning on EVERY call;
+        ensure_tap_packed upgrades it to the silent fast path (the deploy
+        compiler does the same, so compiled programs never hit this)."""
         p, kx = _conv_case(13, 3, 3, 5, 12, 2)
         legacy = {k: v for k, v in p.items() if k != "B_tap_packed"}
         x = jax.random.normal(kx, (1, 8, 8, 5), jnp.float32)
         qc = QuantConfig(mode="binary", M=2, fuse_conv=True, use_pallas=True,
                          interpret=True)
-        binconv._reset_warnings()
         with warnings.catch_warnings(record=True) as rec:
             warnings.simplefilter("always")
             y_legacy = binconv.conv2d_relu_pool(legacy, x, quant=qc)
-            binconv.conv2d_relu_pool(legacy, x, quant=qc)  # second: silent
-        runtime = [r for r in rec if issubclass(r.category, RuntimeWarning)
-                   and "ensure_tap_packed" in str(r.message)]
-        assert len(runtime) == 1, [str(r.message) for r in rec]
+            binconv.conv2d_relu_pool(legacy, x, quant=qc)
+        dep = [r for r in rec if issubclass(r.category, DeprecationWarning)
+               and "ensure_tap_packed" in str(r.message)]
+        assert len(dep) == 2, [str(r.message) for r in rec]  # not warn-once
         upgraded = binconv.ensure_tap_packed(legacy, C=5)
         np.testing.assert_array_equal(np.asarray(upgraded["B_tap_packed"]),
                                       np.asarray(p["B_tap_packed"]))

@@ -7,9 +7,11 @@ JSON-ready dicts of its *derived* metrics (VMEM/HBM bytes, MXU occupancy,
 tile picks, device-call counts — no CPU wall times, which are noise), plus
 the CSV rows themselves, plus a ``program`` section with the deploy
 compiler's per-layer tile plans and MAC/byte stats
-(``BinArrayProgram.layer_stats()`` for CNN-A and MobileNet-B1/B2), so
-future PRs can diff both runtime perf and compile-time decisions without
-parsing the human-oriented derived strings.  CI uploads
+(``BinArrayProgram.layer_stats()`` for CNN-A and MobileNet-B1/B2) and a
+``verify`` section (repro.analysis finding counts + rule coverage per
+program), so future PRs can diff runtime perf, compile-time decisions, and
+static-analysis cleanliness without parsing the human-oriented derived
+strings.  CI uploads
 ``BENCH_kernel.json`` next to the CSV artifact (.github/workflows/ci.yml).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table2,...]
@@ -52,6 +54,30 @@ def program_section() -> dict:
     for key, (arch, shape, kw) in PROGRAMS.items():
         prog = deploy.abstract_program(arch, qc, shape, **kw)
         out[key] = {"totals": prog.totals(), "layers": prog.layer_stats()}
+    return out
+
+
+def verify_section() -> dict:
+    """Static-analysis roll-up for the JSON artifact: per-program finding
+    counts from ``repro.analysis.verify_program`` + the execute-trace lint,
+    plus which rules exist/fired — so BENCH_kernel.json records that the
+    shipped plans are clean (tools/verify_program.py is the failing gate;
+    this is the trajectory record)."""
+    from repro import deploy
+    from repro.analysis import mosaic_rules, summarize, trace_lint
+    from repro.analysis import verify_program as _verify
+    from repro.core.binlinear import QuantConfig
+
+    qc = QuantConfig(mode="binary", M=2, K_iters=1)
+    out: dict = {"rules": sorted(mosaic_rules.RULES)}
+    fired: set[str] = set()
+    for key, (arch, shape, kw) in PROGRAMS.items():
+        prog = deploy.abstract_program(arch, qc, shape, **kw)
+        findings = _verify(prog) + trace_lint.lint_execute(prog,
+                                                           interpret=True)
+        out[key] = summarize(findings)
+        fired.update(out[key]["by_rule"])
+    out["rules_fired"] = sorted(fired)
     return out
 
 
@@ -104,6 +130,13 @@ def main() -> None:
             failed += 1
             doc["program"] = {"error": f"{type(e).__name__}: {e}"}
             print(f"program_section_FAILED,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        try:
+            doc["verify"] = verify_section()
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            doc["verify"] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"verify_section_FAILED,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import time
 
-from repro.core import binarize as bz
 from repro.core import perf_model as pm
 
 PAPER_DSP = {(1, 8, 2): 2, (1, 32, 2): 2, (4, 32, 4): 16, (16, 32, 4): 64}
@@ -22,12 +21,12 @@ DSP_TOTAL = 900  # XC7Z045
 
 def weight_bits(layers, M: int, *, bits_alpha: int = 8) -> int:
     total = 0
-    for l in layers:
-        if isinstance(l, pm.DenseLayer):
-            n_c, d = l.N_in, l.N_out
+    for lyr in layers:
+        if isinstance(lyr, pm.DenseLayer):
+            n_c, d = lyr.N_in, lyr.N_out
         else:
-            n_c = l.W_B * l.H_B * (1 if l.depthwise else l.C_I)
-            d = l.D
+            n_c = lyr.W_B * lyr.H_B * (1 if lyr.depthwise else lyr.C_I)
+            d = lyr.D
         total += M * (n_c + bits_alpha) * d
     return total
 

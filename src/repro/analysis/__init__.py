@@ -1,0 +1,23 @@
+"""Static analysis for compiled BinArrayPrograms (the offline legality
+checker the paper's §IV compiler/ISA contract implies).
+
+  * :mod:`repro.analysis.mosaic_rules` — the TPU tiling/legality rules as
+    data (ids, severities, block-shape checks);
+  * :mod:`repro.analysis.verify` — ``verify_program`` re-derives every
+    instruction's schedule through the kernels' own exports and returns
+    typed ERROR/WARN :class:`Finding`\\ s;
+  * :mod:`repro.analysis.trace_lint` — jaxpr lint of ``deploy.execute``
+    (zero fp convs, zero plan picks, no f64) + retrace detection.
+
+``tools/verify_program.py`` runs the whole pass over the shipped program
+set and gates CI; ``deploy.compile(..., verify=True)`` raises on ERRORs.
+"""
+from repro.analysis import mosaic_rules, trace_lint
+from repro.analysis.verify import (Finding, ProgramVerificationError,
+                                   assert_verified, summarize,
+                                   verify_program)
+
+__all__ = [
+    "Finding", "ProgramVerificationError", "assert_verified",
+    "mosaic_rules", "summarize", "trace_lint", "verify_program",
+]

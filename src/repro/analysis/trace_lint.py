@@ -1,0 +1,145 @@
+"""Jaxpr lint for deploy.execute (and the legacy per-call forwards).
+
+Three contract checks, all on the *trace* rather than on outputs:
+
+  * **trace-fp-conv** — a full-binary program's jaxpr must contain zero
+    ``conv_general_dilated`` primitives: every conv went through the fused
+    Pallas kernels, none fell back to fp ``lax.conv``.
+  * **trace-plan-pick** — tracing the forward must run zero tile auto-picks
+    (``kernels.binary_conv.plan_pick_count``, upgraded here from a test
+    counter to a reusable gate): all scheduling was frozen at compile time.
+  * **trace-f64** — no float64 values anywhere in the trace (accidental
+    x64 promotion would silently double every VMEM estimate).
+
+Plus a **trace-retrace** detector: the executor counts how many times its
+jitted body actually (re)traces; repeated identical traffic must not grow
+the count — the guard against compile-cache leaks in the per-``m_active``
+variant caches (executor schedules, ``serve.Server`` prefill buckets).
+
+Linting uses ``jax.make_jaxpr``, which accepts ShapeDtypeStruct leaves — so
+abstract programs (``deploy.abstract_program``) lint without ever executing
+a kernel, and MobileNet-B2 at 224² costs milliseconds, not minutes.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.analysis.verify import Finding, make_finding
+from repro.kernels import binary_conv as bck
+
+
+def _inner_jaxprs(params: dict):
+    """Yield sub-jaxprs hiding in an equation's params (pjit / scan /
+    pallas_call / custom_jvp all stash them differently)."""
+    for v in params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for u in vs:
+            closed = getattr(u, "jaxpr", None)
+            if closed is not None and hasattr(closed, "eqns"):
+                yield closed            # ClosedJaxpr-like
+            elif hasattr(u, "eqns"):
+                yield u                 # raw Jaxpr
+
+
+def iter_eqns(jaxpr):
+    """DFS over every equation, including nested sub-jaxprs."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        for eqn in j.eqns:
+            yield eqn
+            stack.extend(_inner_jaxprs(eqn.params))
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Occurrences of a primitive (by name) anywhere in the jaxpr."""
+    return sum(1 for eqn in iter_eqns(jaxpr) if eqn.primitive.name == name)
+
+
+def count_f64(jaxpr) -> int:
+    """Equation outputs with a float64 aval anywhere in the jaxpr."""
+    n = 0
+    for eqn in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            dt = getattr(getattr(var, "aval", None), "dtype", None)
+            if dt is not None and str(dt) == "float64":
+                n += 1
+    return n
+
+
+def lint_fn(fn, args, *, full_binary: bool = True,
+            label: str = "trace") -> list[Finding]:
+    """Trace ``fn(*args)`` (ShapeDtypeStruct args are fine) and lint the
+    jaxpr.  The plan-pick counter is snapshot/restored, so linting never
+    poisons a caller's own zero-pick gate."""
+    before = bck.plan_pick_count()
+    try:
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        picks = bck.plan_pick_count() - before
+    finally:
+        bck._plan_picks[0] = before
+    findings: list[Finding] = []
+    if picks:
+        findings.append(make_finding(
+            "trace-plan-pick", label, -1,
+            f"{picks} tile auto-pick(s) ran while tracing — scheduling "
+            f"leaked past compile time"))
+    nconv = count_primitive(jaxpr, "conv_general_dilated")
+    if full_binary and nconv:
+        findings.append(make_finding(
+            "trace-fp-conv", label, -1,
+            f"{nconv} fp conv_general_dilated primitive(s) in a "
+            f"full-binary trace"))
+    n64 = count_f64(jaxpr)
+    if n64:
+        findings.append(make_finding(
+            "trace-f64", label, -1,
+            f"{n64} float64 value(s) in the trace"))
+    return findings
+
+
+def lint_execute(program, x=None, *, m_active=None,
+                 interpret: bool | None = None,
+                 label: str | None = None) -> list[Finding]:
+    """Lint the jaxpr of ``deploy.execute(program, x, m_active)``.
+
+    ``x`` defaults to an abstract batch of ``program.input_shape`` — works
+    for abstract and concrete programs alike, and never runs a kernel.
+    """
+    from repro.deploy import executor
+
+    if x is None:
+        x = jax.ShapeDtypeStruct(tuple(program.input_shape), "float32")
+    return lint_fn(
+        lambda p, xx: executor.execute(p, xx, m_active, interpret=interpret),
+        (program, x), full_binary=True,
+        label=label or f"execute[{program.arch}]")
+
+
+def retrace_findings(program, x, *, schedules=(None,), repeats: int = 3,
+                     interpret: bool | None = None,
+                     label: str | None = None) -> list[Finding]:
+    """Run ``repeats`` rounds of the same ``m_active`` traffic and assert
+    the executor traced at most once per distinct resolved schedule.
+
+    Needs concrete arrays (this one executes).  A warm jit cache can make
+    the observed trace count *lower* than the schedule count — only growth
+    beyond it is a leak.
+    """
+    from repro.deploy import executor
+
+    start = executor.trace_entry_count()
+    for _ in range(repeats):
+        for m in schedules:
+            jax.block_until_ready(
+                executor.execute(program, x, m, interpret=interpret))
+    traced = executor.trace_entry_count() - start
+    expected = len({program.resolve_schedule(m) for m in schedules})
+    if traced > expected:
+        return [make_finding(
+            "trace-retrace", label or f"execute[{program.arch}]", -1,
+            f"{traced} trace entries for {expected} distinct schedule(s) "
+            f"across {repeats}x repeated traffic — a compiled-variant "
+            f"cache is leaking")]
+    return []

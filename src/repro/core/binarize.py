@@ -25,7 +25,6 @@ exactly).  All functions are jit-able and differentiable where meaningful.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -20,7 +20,6 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import binarize as bz
 
 
 class CompressionState(NamedTuple):

@@ -122,12 +122,12 @@ def fps(cfg: BinArrayConfig, layers, M: int, *, clock_hz: float = CLOCK_HZ,
     if exclude_final_dense:
         while use and isinstance(use[-1], DenseLayer):
             use.pop()
-    total = sum(cc_layer(cfg, l, M) for l in use)
+    total = sum(cc_layer(cfg, lyr, M) for lyr in use)
     return clock_hz / total
 
 
 def total_macs(layers) -> int:
-    return sum(l.macs for l in layers)
+    return sum(lyr.macs for lyr in layers)
 
 
 def cpu_fps(layers, *, gops: float = 1e9) -> float:

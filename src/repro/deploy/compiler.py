@@ -34,6 +34,7 @@ from repro.deploy.program import (BinArrayProgram, ConvInstr, DWConvInstr,
                                   LayerStats, LinearInstr, TilePlan)
 from repro.kernels import binary_conv as bck
 from repro.kernels import binary_dwconv as bdw
+from repro.kernels import binary_matmul as bmk
 from repro.kernels import ops as kops
 from repro.models import cnn
 
@@ -173,9 +174,7 @@ def _compile_linear(spec, p, shape, quant):
     G = p["alpha"].shape[1]
     group_size = K // G
     bt, bn, bk = kops.pick_matmul_plan(B, K, N, G=G, group_size=group_size)
-    # per-tile working set of the matmul kernel: x block + packed weight
-    # block + fp32 accumulator (kernels/binary_matmul.py blocking)
-    vmem = bt * bk * 4 + M * (bk // 8) * bn + bt * bn * 4
+    vmem = bmk.tile_vmem_bytes_mm(bt, bn, bk, m=M)
     stats = LayerStats(
         in_shape=(B, K), out_shape=(B, N),
         macs=K * N,
@@ -191,7 +190,8 @@ def _compile_linear(spec, p, shape, quant):
 
 
 def compile(params: dict, arch: str, quant: QuantConfig,
-            input_shape: tuple[int, ...]) -> BinArrayProgram:
+            input_shape: tuple[int, ...], *,
+            verify: bool = False) -> BinArrayProgram:
     """Compile a network into a :class:`BinArrayProgram`.
 
     params:      fp tree (binarized here with ``quant``), a packed tree from
@@ -205,6 +205,12 @@ def compile(params: dict, arch: str, quant: QuantConfig,
                  auto pick, ``interpret`` sets the program's default Pallas
                  interpret flag.
     input_shape: (B, H, W, C) the tile plans are optimized for.
+    verify:      run ``repro.analysis.verify_program`` on the result and
+                 raise :class:`~repro.analysis.ProgramVerificationError` on
+                 any ERROR finding (Mosaic-illegal blocks, out-of-range
+                 plans, VMEM overruns) before the program ever reaches a
+                 TPU.  Off by default — the CLI gate
+                 (``tools/verify_program.py``) covers the shipped programs.
 
     All scheduling (``pick_tile`` / ``pick_tile_dw`` / ``pick_matmul_plan``)
     happens HERE — ``execute`` runs zero plan picks inside its trace
@@ -224,10 +230,17 @@ def compile(params: dict, arch: str, quant: QuantConfig,
         else:
             instr, shape = _compile_linear(spec, p, shape, quant)
         instrs.append(instr)
-    return BinArrayProgram(
+    program = BinArrayProgram(
         instrs=tuple(instrs), arch=arch,
         input_shape=tuple(int(d) for d in input_shape),
         interpret=quant.interpret)
+    if verify:
+        # deferred import: analysis depends on deploy.program, and pulling
+        # the verifier in only when asked keeps plain compiles light
+        from repro.analysis.verify import assert_verified
+
+        assert_verified(program)
+    return program
 
 
 def abstract_program(arch: str, quant: QuantConfig,

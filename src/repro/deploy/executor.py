@@ -23,12 +23,26 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.deploy.program import (BinArrayProgram, ConvInstr, DWConvInstr,
                                   LinearInstr)
 from repro.kernels import ops as kops
 from repro.models.cnn import apply_pre
+
+# Trace-entry accounting, the retrace twin of binary_conv.plan_pick_count:
+# the body of _execute_jit bumps this only when jax.jit actually (re)traces,
+# so repro.analysis.trace_lint can prove repeated identical traffic holds a
+# bounded number of compiled variants (one per distinct m_active schedule).
+_trace_entries = [0]
+
+
+def trace_entry_count() -> int:
+    """How many times the jitted execute body has been traced (process-wide)."""
+    return _trace_entries[0]
+
+
+def reset_trace_entry_count() -> None:
+    _trace_entries[0] = 0
 
 
 def _apply(instr, y: jax.Array, m: int, interpret: bool) -> jax.Array:
@@ -59,6 +73,7 @@ def _apply(instr, y: jax.Array, m: int, interpret: bool) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=("m_schedule", "interpret"))
 def _execute_jit(program: BinArrayProgram, x: jax.Array,
                  m_schedule: tuple[int, ...], interpret: bool) -> jax.Array:
+    _trace_entries[0] += 1          # runs at trace time only, not per call
     y = x
     for instr, m in zip(program.instrs, m_schedule):
         y = _apply(instr, y, m, interpret)

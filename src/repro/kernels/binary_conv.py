@@ -299,6 +299,49 @@ def tile_hbm_bytes(W: int, C: int, kh: int, kw: int, bd: int, *, bu: int,
     return fused, im2col
 
 
+def conv_block_shapes(Hp: int, Wp: int, C: int, D: int, kh: int, kw: int, *,
+                      bd: int, bu: int, nb: int, pool: int = 1,
+                      stride: int = 1, m: int = 1, group_size: int | None
+                      = None, B: int | None = None) -> dict:
+    """The exact BlockSpec geometry ``binary_conv2d_pallas`` builds for a
+    (clamped) tile plan — exported so ``repro.analysis`` checks the real
+    schedule instead of re-deriving its own.
+
+    Returns ``{"blocks": {operand: (block_shape, padded_array_shape, dtype)},
+    "grid": grid, "padded_rows": rows of the padded x, "slab": slab_rows,
+    "adv": row advance per tile, "nt": row tiles}``.  ``Hp``/``Wp`` are the
+    SAME-resolved input dims; ``B`` defaults to one batch tile.  Callers must
+    pass the clamped plan (``bd <= max(8, D)``, ``bu <= Uo``, ``nb <= B``) —
+    the same values the kernel would execute.
+    """
+    U = (Hp - kh) // stride + 1
+    V = (Wp - kw) // stride + 1
+    uo = max(U // pool, 1)
+    T = kh * kw
+    C8 = -(-C // 8)
+    K = T * C
+    G = K // (group_size or K)
+    d_rem = (-D) % bd
+    Dp = D + d_rem
+    nt = -(-uo // bu)
+    adv = bu * pool * stride
+    slab = slab_rows(bu, kh, stride=stride, pool=pool)
+    rows_needed = (nt - 1) * adv + slab
+    row_pad = max(rows_needed - Hp, 0)
+    b = B if B is not None else nb
+    Bp = b + (-b) % nb
+    blocks = {
+        "x": ((nb, slab, Wp, C), (Bp, Hp + row_pad, Wp, C), "float32"),
+        "B_tap_packed": ((m, T, C8, bd), (m, T, C8, Dp), "uint8"),
+        "alpha": ((m, G, bd), (m, G, Dp), "float32"),
+        "bias": ((1, bd), (1, Dp), "float32"),
+        "out": ((nb, bu, V // pool, bd), (Bp, nt * bu, V // pool, Dp),
+                "float32"),
+    }
+    return {"blocks": blocks, "grid": (Bp // nb, Dp // bd, nt),
+            "padded_rows": Hp + row_pad, "slab": slab, "adv": adv, "nt": nt}
+
+
 def pick_bu(H: int, W: int, C: int, kh: int, kw: int, bd: int,
             pool: int = 1, budget_bytes: int = DEFAULT_VMEM_BUDGET, *,
             stride: int = 1, m: int = 1, nb: int = 1) -> int:

@@ -99,6 +99,34 @@ def tile_vmem_bytes_dw(W: int, C: int, kh: int, kw: int, *, bu: int,
     return x_b + w_packed + w_eff + acc + out
 
 
+def dw_block_shapes(Hp: int, Wp: int, C: int, kh: int, kw: int, *,
+                    bu: int, nb: int, stride: int = 1, m: int = 1,
+                    B: int | None = None) -> dict:
+    """The exact BlockSpec geometry ``binary_dwconv2d_pallas`` builds for a
+    (clamped) tile plan — same contract as
+    ``binary_conv.conv_block_shapes``, consumed by ``repro.analysis``."""
+    U = (Hp - kh) // stride + 1
+    V = (Wp - kw) // stride + 1
+    T = kh * kw
+    c8 = -(-C // 8)
+    nt = -(-U // bu)
+    adv = bu * stride
+    slab = slab_rows(bu, kh, stride=stride)
+    rows_needed = (nt - 1) * adv + slab
+    row_pad = max(rows_needed - Hp, 0)
+    b = B if B is not None else nb
+    Bp = b + (-b) % nb
+    blocks = {
+        "x": ((nb, slab, Wp, C), (Bp, Hp + row_pad, Wp, C), "float32"),
+        "B_tap_packed": ((m, T, c8), (m, T, c8), "uint8"),
+        "alpha": ((m, C), (m, C), "float32"),
+        "bias": ((1, C), (1, C), "float32"),
+        "out": ((nb, bu, V, C), (Bp, nt * bu, V, C), "float32"),
+    }
+    return {"blocks": blocks, "grid": (Bp // nb, nt),
+            "padded_rows": Hp + row_pad, "slab": slab, "adv": adv, "nt": nt}
+
+
 def pick_bu_dw(H: int, W: int, C: int, kh: int, kw: int,
                budget_bytes: int = DEFAULT_VMEM_BUDGET, *,
                stride: int = 1, m: int = 1, nb: int = 1) -> int:

@@ -55,6 +55,40 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def tile_vmem_bytes_mm(bt: int, bn: int, bk: int, *, m: int = 1) -> int:
+    """Analytic per-tile VMEM working set of the matmul kernel: fp32 x block
+    + bit-packed weight block + fp32 accumulator (module docstring formula).
+    Shared by the deploy compiler's LayerStats and repro.analysis."""
+    return bt * bk * 4 + m * (bk // 8) * bn + bt * bn * 4
+
+
+def matmul_block_shapes(T: int, K: int, N: int, *, bt: int, bn: int, bk: int,
+                        m: int = 1, G: int = 1,
+                        group_size: int | None = None) -> tuple[dict, int]:
+    """The exact BlockSpec geometry ``binary_matmul_pallas`` builds for a
+    block plan, plus the *effective* bk (the kernel silently overrides bk to
+    the whole padded K when grouped alpha boundaries cannot align with the
+    K tiles).  Returns ``({operand: (block_shape, padded_array_shape,
+    dtype)}, effective_bk)`` — consumed by ``repro.analysis``."""
+    K8 = -(-K // 8)
+    group_size = group_size or (K // max(G, 1))
+    full_groups = G > 1 and group_size % bk != 0
+    if full_groups:
+        bk = K8 * 8
+    K_pad = K8 * 8
+    Kp = K_pad + (-K_pad) % bk
+    Tp = T + (-T) % bt
+    Np = N + (-N) % bn
+    alpha_block = (m, G, bn) if full_groups else (m, 1, bn)
+    blocks = {
+        "x": ((bt, bk), (Tp, Kp), "float32"),
+        "B_packed": ((m, bk // 8, bn), (m, Kp // 8, Np), "uint8"),
+        "alpha": (alpha_block, (m, G, Np), "float32"),
+        "out": ((bt, bn), (Tp, Np), "float32"),
+    }
+    return blocks, bk
+
+
 def _kernel(x_ref, bp_ref, alpha_ref, o_ref, *, m_active: int, n_k_blocks: int,
             full_groups_size: int = 0):
     """One (BT, BN) output tile; invoked n_k_blocks times along the K grid.

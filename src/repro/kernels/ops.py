@@ -37,10 +37,21 @@ def pick_matmul_plan(T: int, K: int, N: int, *, G: int,
     """
     K8 = -(-K // 8)
     bt = _pick_block(T, 128)
+    # Lane legality (analysis/mosaic_rules.py `mosaic-lane`): a block's last
+    # dim must be a multiple of 128 lanes *or* cover the whole padded array
+    # dim — Mosaic pads a lone sub-128-lane array transparently, but several
+    # sub-128 blocks violate the register tiling.  So below 128 we take one
+    # block over the whole 8-aligned padded dim instead of a smaller
+    # power of two.  bn only re-blocks output columns (never the K reduction
+    # order), so this stays bit-exact against any other bn.
     bn = _pick_block(N, 128)
+    if bn < 128:
+        bn = -(-N // 8) * 8
     # bk must divide group_size (or G == 1); cap at 256 for VMEM
     if G == 1:
         bk = _pick_block(K8 * 8, 256)
+        if bk < 128:
+            bk = K8 * 8          # whole padded K in one (legal) block
     elif group_size % 8 == 0:
         bk = _pick_block(group_size, 256)
         while group_size % bk and bk > 8:

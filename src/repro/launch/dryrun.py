@@ -112,7 +112,6 @@ def extrapolated_costs(cfg, mesh, shape_name, *, n_dev) -> dict:
 def run_cell(arch: str, shape: str, mesh_kind: str, *, tag: str = "",
              overrides: dict | None = None) -> dict:
     """Lower + compile one cell; returns the result record."""
-    import jax
 
     from repro.configs import base as cb
     from repro.launch import hlo_analysis as ha

@@ -95,7 +95,7 @@ def _binarized_param_bytes_per_device(cfg, n_model_shards: int) -> float:
                                             qc=cfg.quant),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
     packed_elems = sum(
-        l.size for l in jax.tree.leaves(shapes) if l.dtype == jnp.uint8)
+        t.size for t in jax.tree.leaves(shapes) if t.dtype == jnp.uint8)
     m = cfg.quant.m_active or cfg.quant.M
     # packed_elems = M * ceil(K/8) * N summed -> P_bin = packed_elems*8/M
     p_bin = packed_elems * 8 / cfg.quant.M

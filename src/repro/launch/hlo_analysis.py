@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -31,7 +30,10 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# Tolerant of non-numeric dim tokens: bounded-dynamic dims ("<=16" — use
+# the bound) and unranked/scalar "[]" must not make the whole shape silently
+# vanish (the old `[\d,]*` regex returned 0 bytes for both).
+_SHAPE_RE = re.compile(r"(\w+)\[([^\]]*)\]")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
@@ -40,9 +42,14 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     if dtype not in _DTYPE_BYTES:
         return 0
     n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
+    for tok in dims.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue          # "[]": scalar / unranked — one element
+        if tok.startswith("<="):
+            tok = tok[2:]     # bounded-dynamic dim: charge the bound
+        if tok.isdigit():
+            n *= int(tok)
     return n * _DTYPE_BYTES[dtype]
 
 
@@ -56,7 +63,14 @@ def _result_bytes(line: str) -> int:
     op_pos = min((rhs.find(c) for c in _COLLECTIVES if rhs.find(c) >= 0),
                  default=-1)
     head = rhs[:op_pos] if op_pos > 0 else rhs.split("(")[0]
-    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+    shapes = _SHAPE_RE.findall(head)
+    # Async "-start" collectives return a tuple aliasing their operands,
+    # (in_0..in_{k-1}, out_0..out_{k-1}); only the output half is the
+    # collective's result — summing the whole tuple double-counts.
+    if ("-start(" in rhs and head.lstrip().startswith("(")
+            and len(shapes) >= 2 and len(shapes) % 2 == 0):
+        shapes = shapes[len(shapes) // 2:]
+    return sum(_shape_bytes(d, dims) for d, dims in shapes)
 
 
 def _group_size(line: str, total_devices: int) -> int:
@@ -134,8 +148,7 @@ def op_bytes_profile(hlo_text: str, top: int = 20):
             s = s[5:].strip() if s.startswith("ROOT ") else s
         if " = " not in s:
             continue
-        lhs, rhs = s.split(" = ", 1)
-        m = re.match(r"[\w.\-%]+", rhs)
+        _, rhs = s.split(" = ", 1)
         # op name = first identifier after the shape spec
         om = re.search(r"\)?\s*([a-z][\w-]*)\(", rhs)
         if not om:

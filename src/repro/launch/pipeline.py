@@ -12,7 +12,6 @@ validates numerically against the unpipelined reference on 8 host devices).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ optional binary gradient compression (core/compress.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -13,8 +13,6 @@ from __future__ import annotations
 import argparse
 import logging
 
-import jax
-import jax.numpy as jnp
 
 from repro.configs import base as cb
 from repro.data.tokens import SyntheticTokens

@@ -9,7 +9,6 @@ rules are installed and constraints are no-ops.
 from __future__ import annotations
 
 import threading
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -131,7 +131,6 @@ def encdec_forward(params, cfg: ArchConfig, tokens, frame_embeds):
         for i in range(n):
             x, _ = body(x, jax.tree.map(lambda t: t[i], params["dec_layers"]))
     x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
-    from repro.models.transformer import lm_logits
 
     table = params["embed"]
     return cm.softcap(cm.unembed(table, x), cfg.logit_softcap)

@@ -6,7 +6,6 @@ leading dense layers (DeepSeek-V3's 3) and the main stack (dense FFN or MoE).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -198,8 +197,10 @@ def lm_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
         one = attn.mla_cache_specs(cfg, batch, max_len)
     else:
         one = attn.attn_cache_specs(cfg, batch, max_len)
-    stack = lambda n: jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), one)
+    def stack(n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), one)
+
     spec = {"layers": stack(n_main)}
     if cfg.n_dense_layers:
         spec["dense_layers"] = stack(cfg.n_dense_layers)

@@ -1,2 +1,7 @@
 from repro.optim.optimizers import adamw, sgd, Optimizer, clip_by_global_norm
 from repro.optim.schedule import cosine_schedule, exponential_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer", "adamw", "clip_by_global_norm", "cosine_schedule",
+    "exponential_decay", "sgd", "warmup_cosine",
+]

@@ -1,0 +1,77 @@
+"""launch.hlo_analysis shape parsing + collective accounting unit tests.
+
+Regression coverage for the shape-regex fixes: tuple-result async
+collectives (``all-gather-start`` returning ``(inputs..., outputs...)``),
+bounded-dynamic dims (``f32[<=16,8]``), and unranked/scalar ``f32[]`` — the
+old ``[\\d,]*`` regex silently dropped all three to zero bytes.
+"""
+from repro.launch import hlo_analysis as ha
+
+
+class TestShapeBytes:
+    def test_plain_shape(self):
+        assert ha._shape_bytes("f32", "32,128") == 32 * 128 * 4
+
+    def test_scalar_empty_dims(self):
+        assert ha._shape_bytes("f32", "") == 4
+
+    def test_bounded_dynamic_dim_charges_the_bound(self):
+        assert ha._shape_bytes("f32", "<=16,8") == 16 * 8 * 4
+
+    def test_unknown_dtype_is_zero(self):
+        assert ha._shape_bytes("token", "") == 0
+
+    def test_dtype_widths(self):
+        assert ha._shape_bytes("bf16", "4,4") == 32
+        assert ha._shape_bytes("u8", "4,4") == 16
+
+
+class TestResultBytes:
+    def test_sync_collective_result(self):
+        line = ("%ag = f32[32,128]{1,0} all-gather(f32[8,128]{1,0} %p), "
+                "replica_groups={{0,1,2,3}}, dimensions={0}")
+        assert ha._result_bytes(line) == 32 * 128 * 4
+
+    def test_async_tuple_start_counts_output_half_only(self):
+        # (input, output) tuple: summing both halves double-counts
+        line = ("%ags = (f32[8,128]{1,0}, f32[32,128]{1,0}) "
+                "all-gather-start(f32[8,128]{1,0} %p), "
+                "replica_groups={{0,1,2,3}}, dimensions={0}")
+        assert ha._result_bytes(line) == 32 * 128 * 4
+
+    def test_bounded_dynamic_result_is_nonzero(self):
+        line = "%r = f32[<=16,8] all-reduce(f32[<=16,8] %p), to_apply=%add"
+        assert ha._result_bytes(line) == 16 * 8 * 4
+
+    def test_scalar_result(self):
+        line = "%r = f32[] all-reduce(f32[] %p), to_apply=%add"
+        assert ha._result_bytes(line) == 4
+
+
+class TestCollectiveStats:
+    HLO = "\n".join([
+        "ENTRY %main {",
+        "  %p = f32[8,128]{1,0} parameter(0)",
+        "  %ag = f32[32,128]{1,0} all-gather(%p), "
+        "replica_groups={{0,1,2,3}}, dimensions={0}",
+        "  %ars = (f32[8,128]{1,0}, f32[8,128]{1,0}) "
+        "all-reduce-start(f32[8,128]{1,0} %p), replica_groups={{0,1,2,3}}, "
+        "to_apply=%add",
+        "  ROOT %t = f32[32,128]{1,0} copy(%ag)",
+        "}",
+    ])
+
+    def test_counts_and_bytes(self):
+        st = ha.collective_stats(self.HLO, total_devices=4)
+        assert st.ops == {"all-gather": 1, "all-reduce": 1}
+        ag = 32 * 128 * 4
+        ar = 8 * 128 * 4            # output half of the start tuple
+        assert st.result_bytes["all-gather"] == ag
+        assert st.result_bytes["all-reduce"] == ar
+        # ring factors: AG (g-1)/g, AR 2(g-1)/g over g=4
+        assert st.wire_bytes == ag * 3 / 4 + 2 * ar * 3 / 4
+        assert st.total_result_bytes() == ag + ar
+
+    def test_non_collective_lines_ignored(self):
+        st = ha.collective_stats("  %c = f32[4,4] copy(%p)\n", 4)
+        assert st.ops == {} and st.wire_bytes == 0.0

@@ -1,8 +1,4 @@
 """Tests for the paper's analytical performance model (Eq. 14-18)."""
-import math
-
-import pytest
-
 from repro.core import perf_model as pm
 
 

@@ -1,0 +1,131 @@
+"""Retrace detection: repeated identical traffic must not grow compile
+caches.
+
+Two surfaces hold per-variant compiled functions:
+  * ``deploy.executor`` — one jitted execute per distinct resolved
+    ``m_active`` schedule (the trace-entry counter is the proof hook);
+  * ``launch.serve.Server`` — per-``m_active`` decode/prefill closures plus
+    the bucketed-prefill length cache.
+
+Each test runs the same traffic three times and asserts the variant count
+after round one never grows again.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import deploy
+from repro.analysis import trace_lint
+from repro.configs import base as cb
+from repro.core.binlinear import QuantConfig
+from repro.deploy import executor
+from repro.launch.serve import Request, Server
+from repro.models import api, cnn
+
+jax.config.update("jax_platform_name", "cpu")
+
+QC = QuantConfig(mode="binary", M=2, K_iters=2, interpret=True)
+
+
+class TestExecutorRetrace:
+    def test_repeated_schedules_hold_bounded_variants(self):
+        params = cnn.init_cnn_a(jax.random.PRNGKey(0))
+        # B=4 is unique to this test -> the first round really traces
+        prog = deploy.compile(cnn.binarize_cnn_a(params, QC), "cnn_a", QC,
+                              (4, 48, 48, 3))
+        x = jnp.ones((4, 48, 48, 3), jnp.float32)
+        schedules = (None, 1, (1, 2, 1, 2, 1))
+        distinct = len({prog.resolve_schedule(m) for m in schedules})
+        assert distinct == 3
+        c0 = executor.trace_entry_count()
+        for m in schedules:   # warm round: one trace per distinct schedule
+            jax.block_until_ready(deploy.execute(prog, x, m))
+        warm = executor.trace_entry_count() - c0
+        assert 1 <= warm <= distinct
+        for _ in range(3):    # identical traffic: zero new traces
+            for m in schedules:
+                jax.block_until_ready(deploy.execute(prog, x, m))
+        assert executor.trace_entry_count() - c0 == warm
+
+    def test_retrace_findings_clean_on_repeated_traffic(self):
+        params = cnn.init_cnn_a(jax.random.PRNGKey(1))
+        prog = deploy.compile(cnn.binarize_cnn_a(params, QC), "cnn_a", QC,
+                              (2, 48, 48, 3))
+        x = jnp.ones((2, 48, 48, 3), jnp.float32)
+        assert trace_lint.retrace_findings(
+            prog, x, schedules=(None, 1), repeats=3, interpret=True) == []
+
+    def test_clamped_schedules_share_one_variant(self):
+        """m_active=2 and m_active=5 both clamp to every layer's M=2 — same
+        resolved schedule, so the second must reuse the first's trace."""
+        params = cnn.init_cnn_a(jax.random.PRNGKey(2))
+        prog = deploy.compile(cnn.binarize_cnn_a(params, QC), "cnn_a", QC,
+                              (2, 48, 48, 3))
+        assert prog.resolve_schedule(2) == prog.resolve_schedule(5)
+        x = jnp.ones((2, 48, 48, 3), jnp.float32)
+        jax.block_until_ready(deploy.execute(prog, x, 2))
+        c0 = executor.trace_entry_count()
+        jax.block_until_ready(deploy.execute(prog, x, 5))
+        assert executor.trace_entry_count() == c0
+
+
+class TestServerRetrace:
+    def _traffic(self, srv):
+        # mixed lengths (prefix lens 2, 4, 6 -> pow2 buckets 2, 4, 8) x
+        # mixed per-request m_active
+        for n, m in ((3, None), (5, 1), (7, None), (5, 1)):
+            req = Request(prompt=np.arange(1, n + 1, dtype=np.int32),
+                          max_new_tokens=2, m_active=m)
+            assert srv.admit(req)
+            srv.run_until_done()
+
+    def test_repeated_traffic_holds_bounded_compiled_variants(self):
+        cfg = cb.reduced(cb.get_config("gemma_2b")).replace(dtype="float32")
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(cfg, params, max_batch=2, max_len=32)
+        self._traffic(srv)
+        decode_v = len(srv._decode_fns)
+        prefill_v = len(srv._prefill_fns)
+        lens_v = srv.stats["prefill_unique_lens"]
+        assert decode_v <= 2          # m_active in {None, 1}
+        assert prefill_v <= 2
+        assert lens_v <= 3 * 2        # <= distinct (bucket, m) pairs
+        for _ in range(3):            # 3x the same traffic: no growth
+            self._traffic(srv)
+        assert len(srv._decode_fns) == decode_v
+        assert len(srv._prefill_fns) == prefill_v
+        assert srv.stats["prefill_unique_lens"] == lens_v
+        assert srv.stats["prefill_bucket_hits"] > 0
+
+    def test_bucketed_prefill_reuses_lengths_across_rounds(self):
+        cfg = cb.reduced(cb.get_config("gemma_2b")).replace(dtype="float32")
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(cfg, params, max_batch=2, max_len=32,
+                     prefill_buckets="pow2")
+        for _ in range(3):
+            for n in (3, 5, 6):   # prefix lens 2, 4, 5 -> buckets 2, 4, 8
+                req = Request(prompt=np.arange(1, n + 1, dtype=np.int32),
+                              max_new_tokens=1)
+                assert srv.admit(req)
+                srv.run_until_done()
+        assert srv.stats["prefill_unique_lens"] == 3
+        assert srv.stats["prefill_bucket_hits"] == 3 * 3 - 3
+
+
+class TestProgramScheduleStatic:
+    def test_schedule_is_aux_data_not_a_leaf(self):
+        """The plan/schedule must live in the treedef: two programs that
+        differ only in a plan field get different treedefs (so jit keys on
+        them), while reshaping weights alone keeps the treedef."""
+        params = cnn.init_cnn_a(jax.random.PRNGKey(3))
+        prog = deploy.compile(cnn.binarize_cnn_a(params, QC), "cnn_a", QC,
+                              (2, 48, 48, 3))
+        _, td1 = jax.tree_util.tree_flatten(prog)
+        instrs = list(prog.instrs)
+        instrs[0] = dataclasses.replace(
+            instrs[0], plan=dataclasses.replace(instrs[0].plan, bu=1))
+        prog2 = dataclasses.replace(prog, instrs=tuple(instrs))
+        _, td2 = jax.tree_util.tree_flatten(prog2)
+        assert td1 != td2

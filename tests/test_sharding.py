@@ -1,8 +1,6 @@
 """Sharding-rule unit tests (fast — pattern/spec logic, no big compiles)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import base as cb
@@ -15,8 +13,6 @@ jax.config.update("jax_platform_name", "cpu")
 def _mesh(multi=False):
     # abstract mesh over fake devices is not needed — rules only read
     # mesh.shape / axis_names; build the smallest real mesh and patch shape
-    import jax.sharding as js
-
     class FakeMesh:
         def __init__(self, shape_map):
             self._s = shape_map

@@ -11,8 +11,11 @@ compiler's per-layer tile plans and MAC/byte stats
 ``verify`` section (repro.analysis finding counts + rule coverage per
 program), so future PRs can diff runtime perf, compile-time decisions, and
 static-analysis cleanliness without parsing the human-oriented derived
-strings.  CI uploads
-``BENCH_kernel.json`` next to the CSV artifact (.github/workflows/ci.yml).
+strings.  A ``meta`` block (schema version, git sha, jax version, platform)
+makes artifacts pairable: ``tools/bench_diff.py`` diffs two such documents
+and fails CI on occupancy/VMEM/device-call regressions vs the committed
+``BENCH_baseline.json``.  CI uploads ``BENCH_kernel.json`` next to the CSV
+artifact (.github/workflows/ci.yml).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table2,...]
                                                 [--json BENCH_kernel.json]
@@ -21,9 +24,17 @@ from __future__ import annotations
 
 import argparse
 import json
+import platform
+import subprocess
 import sys
 import time
 import traceback
+
+# Version of the --json document layout.  Bump on any structural change to
+# the emitted sections (modules/structured row schemas, program, verify) —
+# tools/bench_diff.py refuses to compare documents whose schema differs, so
+# a layout change can never masquerade as a perf change.
+SCHEMA_VERSION = 1
 
 MODULES = [
     ("table2", "benchmarks.table2_accuracy"),
@@ -81,6 +92,29 @@ def verify_section() -> dict:
     return out
 
 
+def meta_section(quick: bool, only: str) -> dict:
+    """Provenance block so artifacts pair: two BENCH_*.json files are
+    comparable iff their schema matches (bench_diff enforces it), and the
+    git sha / jax version / platform say *what* produced each side."""
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:  # noqa: BLE001 — not a checkout / git missing
+        sha = "unknown"
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "platform": platform.platform(),
+        "python_version": platform.python_version(),
+        "quick": quick,
+        "only": only,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -93,7 +127,8 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failed = 0
-    doc: dict = {"quick": args.quick, "modules": {}}
+    doc: dict = {"quick": args.quick, "modules": {},
+                 "meta": meta_section(args.quick, args.only)}
     for key, modname in MODULES:
         if only and key not in only:
             continue

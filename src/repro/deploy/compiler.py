@@ -41,12 +41,15 @@ from repro.models import cnn
 ARCHS = ("cnn_a", "mobilenet")
 
 
-def _specs(arch: str):
+def _specs(arch):
+    if isinstance(arch, (tuple, list)):   # explicit LayerSpec list (fuzz /
+        return tuple(arch)                # custom topologies)
     if arch == "cnn_a":
         return cnn.cnn_a_specs()
     if arch == "mobilenet":
         return cnn.mobilenet_specs()
-    raise ValueError(f"unknown arch {arch!r}; expected one of {ARCHS}")
+    raise ValueError(f"unknown arch {arch!r}; expected one of {ARCHS} "
+                     "or an explicit LayerSpec sequence")
 
 
 def _bias(p: dict, n: int) -> jax.Array:
@@ -198,7 +201,9 @@ def compile(params: dict, arch: str, quant: QuantConfig,
                  ``binarize_cnn_a`` / ``binarize_mobilenet`` (reused as-is),
                  or a legacy packed tree without ``B_tap_packed`` (upgraded).
     arch:        "cnn_a" | "mobilenet" — selects the LayerSpec list in
-                 models/cnn.py (the single topology source of truth).
+                 models/cnn.py (the single topology source of truth) — or
+                 an explicit LayerSpec sequence (custom/fuzzed topologies;
+                 the program's ``arch`` records "custom").
     quant:       packing config (M, algorithm, K_iters, group_size) plus the
                  compile-time knobs: ``m_active`` biases the VMEM plan,
                  ``conv_batch_tile`` / ``conv_vmem_budget`` override the
@@ -231,7 +236,8 @@ def compile(params: dict, arch: str, quant: QuantConfig,
             instr, shape = _compile_linear(spec, p, shape, quant)
         instrs.append(instr)
     program = BinArrayProgram(
-        instrs=tuple(instrs), arch=arch,
+        instrs=tuple(instrs),
+        arch=arch if isinstance(arch, str) else "custom",
         input_shape=tuple(int(d) for d in input_shape),
         interpret=quant.interpret)
     if verify:

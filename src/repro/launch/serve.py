@@ -136,6 +136,22 @@ class Server:
                       "decode_steps": 0, "prefill_bucket_hits": 0,
                       "prefill_unique_lens": 0}
 
+    def cache_sizes(self) -> dict:
+        """Entry counts of every unbounded-dict-shaped cache the server
+        holds — the quantities a soak run must prove flat under repeated
+        traffic (repro.testing.soak).  ``decode_fns``/``prefill_fns`` are
+        the per-``m_active`` jitted closures (bounded by M+1 by
+        construction); ``prefill_lens`` is the bucketed-prefill compile map
+        (bounded by buckets x level counts)."""
+        return {"decode_fns": len(self._decode_fns),
+                "prefill_fns": len(self._prefill_fns),
+                "prefill_lens": len(self._prefill_lens_seen)}
+
+    def cache_gauges(self) -> dict:
+        """``name -> callable`` gauge closures for ``repro.testing.soak``."""
+        return {name: (lambda n=name: float(self.cache_sizes()[n]))
+                for name in self.cache_sizes()}
+
     @property
     def _bulk(self) -> bool:
         return (self.prefill_mode != "tokenwise"

@@ -88,6 +88,21 @@ def _forward(specs, params, x: jax.Array, quant: QuantConfig) -> jax.Array:
     return y
 
 
+def spec_forward(specs, params, x: jax.Array,
+                 quant: QuantConfig = DENSE) -> jax.Array:
+    """Public spec-driven forward over an arbitrary LayerSpec list — the
+    per-call reference the deploy executor must match bit-exactly for ANY
+    topology, which is what the differential fuzz tier
+    (tests/test_fuzz_programs.py) exercises via
+    ``repro.testing.fuzz.random_network``."""
+    return _forward(tuple(specs), params, x, quant)
+
+
+def spec_binarize(specs, params, quant: QuantConfig) -> dict:
+    """Public spec-driven offline packing for an arbitrary LayerSpec list."""
+    return _binarize(tuple(specs), params, quant)
+
+
 def _binarize(specs, params, quant: QuantConfig) -> dict:
     """Spec-driven offline conversion to packed-binary deployment form."""
     out = {}

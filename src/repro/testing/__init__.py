@@ -1,0 +1,15 @@
+"""Reusable test/soak infrastructure (importable, not test-collected).
+
+  * :mod:`repro.testing.soak` — the soak driver: run a workload closure for
+    thousands of steps, sample RSS/tracemalloc/latency/cache gauges, fit
+    linear trends, assert them flat (``run_soak`` / ``SoakResult``).
+  * :mod:`repro.testing.scenarios` — the three long-lived-surface soak
+    scenarios (server traffic, executor schedule rotation, checkpoint
+    cycle) shared by the ``soak`` pytest tier and ``tools/soak.py``.
+  * :mod:`repro.testing.fuzz` — legal-by-construction random network
+    generator for the differential fuzz tier.
+
+Lives under ``src/repro`` (not ``tests/``) because tools/ and CI consume
+it too; heavyweight imports (jax, server, compiler) stay inside the
+scenario builders so ``import repro.testing.soak`` is cheap.
+"""

@@ -1,0 +1,184 @@
+"""Differential-fuzz network generator: random LayerSpec lists + params.
+
+The deploy compiler (``repro.deploy.compile``) accepts any LayerSpec
+sequence, and the executor's contract is bit-exactness against the per-call
+spec forward (``models.cnn.spec_forward``) for every legal topology — not
+just the two hand-built ones.  This module generates *legal-by-construction*
+random networks so the fuzz tier (tests/test_fuzz_programs.py) can drive
+
+    random specs -> compile -> verify_program (zero ERRORs) -> execute
+                 -> bit-exact vs the per-call fused forward
+                 -> allclose vs the unfused fake-quant reconstruction
+
+over shapes/strides/pooling/M-levels/ragged batches the unit tests never
+hand-picked.  Everything is derived from one integer seed
+(``random.Random(seed)``), so failures replay exactly.
+
+Legality constraints encoded here (mirrors the compiler's own checks):
+  * conv kernels fit the current map (kh <= Hp, kw <= Wp for VALID);
+  * the AMU pool window divides the conv output (paper §III-B:
+    downsampling only — the compiler raises otherwise);
+  * depth-wise layers are 3x3 SAME (MobileNet's only variant);
+  * a ``flatten``/``gap`` pre-op transitions to the linear tail, and the
+    last layer drops ReLU (logits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn import LayerSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class FuzzNet:
+    """One generated network: topology + matching fp params + geometry."""
+
+    specs: tuple[LayerSpec, ...]
+    input_shape: tuple[int, int, int, int]   # (B, H, W, C) compile target
+    exec_batch: int                          # ragged-batch execute size
+    M: int                                   # packed level count
+
+    def init_params(self, key) -> dict:
+        """fp parameter tree matching ``specs`` (shapes re-derived by the
+        same walk the generator ran)."""
+        params = {}
+        _, H, W, C = self.input_shape
+        shapes = _shape_walk(self.specs, (H, W, C))
+        ks = jax.random.split(key, len(self.specs))
+        for (spec, (shp_in, shp_out)), k in zip(shapes, ks):
+            if spec.kind == "conv":
+                cin, cout = shp_in[2], shp_out[2]
+                w = jax.random.normal(
+                    k, (spec.kh, spec.kw, cin, cout)) / (spec.kh * spec.kw)
+                params[spec.name] = {"w": w.astype(jnp.float32),
+                                     "b": jnp.zeros((cout,), jnp.float32)}
+            elif spec.kind == "dwconv":
+                cin = shp_in[2]
+                w = jax.random.normal(k, (spec.kh, spec.kw, 1, cin)) * 0.3
+                params[spec.name] = {"w": w.astype(jnp.float32),
+                                     "b": jnp.zeros((cin,), jnp.float32)}
+            else:
+                kin, nout = shp_in
+                w = jax.random.normal(k, (kin, nout)) / jnp.sqrt(kin)
+                params[spec.name] = {"w": w.astype(jnp.float32),
+                                     "b": jnp.zeros((nout,), jnp.float32)}
+        return params
+
+
+def _shape_walk(specs, hwc):
+    """[(spec, ((in-geom), (out-geom)))] — conv/dw geoms are (H, W, C),
+    linear geoms are (K, N), re-derived from the names' embedded dims."""
+    out = []
+    cur = hwc
+    for spec in specs:
+        dims = [int(d) for d in spec.name.split("_")[-1].split("x")]
+        if spec.kind == "conv":
+            D = dims[0]
+            H, W, C = cur
+            Hp, Wp = _padded(H, W, spec)
+            U = (Hp - spec.kh) // spec.stride + 1
+            V = (Wp - spec.kw) // spec.stride + 1
+            nxt = (U // spec.pool, V // spec.pool, D)
+            out.append((spec, ((H, W, C), nxt)))
+            cur = nxt
+        elif spec.kind == "dwconv":
+            H, W, C = cur
+            # dw layers are ALWAYS SAME (the compiler ignores spec.padding)
+            Hp, Wp = _padded(H, W, dataclasses.replace(spec, padding="SAME"))
+            U = (Hp - spec.kh) // spec.stride + 1
+            V = (Wp - spec.kw) // spec.stride + 1
+            nxt = (U, V, C)
+            out.append((spec, ((H, W, C), nxt)))
+            cur = nxt
+        else:
+            N = dims[0]
+            if spec.pre == "flatten":
+                K = cur[0] * cur[1] * cur[2] if len(cur) == 3 else cur[0]
+            elif spec.pre == "gap":
+                K = cur[2]
+            else:
+                K = cur[0]
+            out.append((spec, ((K, N), (N,))))
+            cur = (N,)
+    return out
+
+
+def _padded(H, W, spec):
+    if spec.padding != "SAME":
+        return H, W
+    from repro.core.binconv import same_pads
+
+    (pt, pb) = same_pads(H, spec.kh, spec.stride)
+    (pl, pr) = same_pads(W, spec.kw, spec.stride)
+    return H + pt + pb, W + pl + pr
+
+
+def random_network(seed: int, *, max_layers: int = 5) -> FuzzNet:
+    """Generate one legal network from ``seed``.
+
+    Spatial section: 1-3 conv/dwconv layers over small maps (H, W in
+    [8, 20], C in {3, 4, 8}, D in {8, 16, 32}, strides {1, 2}, pools
+    {1, 2, 3} restricted to divisors of the conv output).  Tail: a
+    flatten/gap transition linear plus 0-2 more, last one without ReLU.
+    """
+    rng = random.Random(seed)
+    H = rng.randint(8, 20)
+    W = rng.randint(8, 20)
+    C = rng.choice((3, 4, 8))
+    M = rng.choice((1, 2, 2))            # bias toward the paper's M=2
+    specs: list[LayerSpec] = []
+    cur = (H, W, C)
+    n_spatial = rng.randint(1, max(1, max_layers - 2))
+    for li in range(n_spatial):
+        h, w, c = cur
+        use_dw = c % 8 == 0 and min(h, w) >= 3 and rng.random() < 0.4
+        if use_dw:
+            stride = rng.choice((1, 2)) if min(h, w) >= 6 else 1
+            spec = LayerSpec(f"dw{li}_{c}x{c}", "dwconv", kh=3, kw=3,
+                             stride=stride)
+            specs.append(spec)
+            cur = _shape_walk((spec,), cur)[0][1][1]
+            continue
+        padding = rng.choice(("VALID", "SAME"))
+        kmax = min(5, h, w)
+        kh = rng.randint(1, kmax)
+        kw = rng.randint(1, kmax)
+        stride = rng.choice((1, 2)) if min(h, w) > 6 else 1
+        # lane-legal output-channel counts only: the conv bd pick snaps to
+        # a divisor of 128, so D must pad to a legal block (the verifier
+        # ERRORs on e.g. D=24 -> bd 16 over padded 32 — by design)
+        D = rng.choice((8, 16, 32))
+        hp, wp = (h, w) if padding == "VALID" else _padded(
+            h, w, LayerSpec("t", "conv", kh=kh, kw=kw, stride=stride,
+                            padding="SAME"))
+        U = (hp - kh) // stride + 1
+        V = (wp - kw) // stride + 1
+        if U < 1 or V < 1:
+            continue
+        pools = [p for p in (1, 2, 3) if U % p == 0 and V % p == 0]
+        pool = rng.choice(pools)
+        spec = LayerSpec(f"conv{li}_{D}", "conv", kh=kh, kw=kw,
+                         stride=stride, padding=padding, pool=pool)
+        specs.append(spec)
+        cur = _shape_walk((spec,), cur)[0][1][1]
+        if min(cur[0], cur[1]) < 2:
+            break
+    # linear tail: flatten or gap transition, then 0-2 plain linears
+    pre = rng.choice(("flatten", "flatten", "gap")) if specs else "flatten"
+    if not specs:  # degenerate: all-spatial generation failed -> pure MLP
+        cur = (H, W, C)
+    n_tail = rng.randint(1, 3)
+    for ti in range(n_tail):
+        N = rng.choice((8, 16, 32))
+        last = ti == n_tail - 1
+        specs.append(LayerSpec(f"fc{ti}_{N}", "linear",
+                               pre=pre if ti == 0 else "none",
+                               relu=not last))
+    B = rng.randint(1, 3)
+    exec_b = rng.randint(1, 5)
+    return FuzzNet(specs=tuple(specs), input_shape=(B, H, W, C),
+                   exec_batch=exec_b, M=M)

@@ -1,0 +1,224 @@
+"""Soak scenarios for the three long-lived serving surfaces.
+
+Each builder returns a :class:`Scenario` — a step closure plus the gauges
+that must stay flat — consumed by ``repro.testing.soak.run_soak`` from both
+the ``soak``-marked pytest tier (tests/test_soak.py) and the nightly CLI
+(tools/soak.py).  The scenarios are the repo's production surfaces, not
+synthetic loops:
+
+  * ``server_scenario`` — ``launch.serve.Server`` under continuous mixed
+    traffic: rotating prompt lengths (exercising the bucketed-prefill map)
+    and rotating per-request ``m_active`` (exercising the per-level-count
+    jitted decode/prefill caches).  Every soak step is one batched decode
+    round; freed slots are immediately re-admitted so the server never
+    idles.  The gauges are the compiled-variant counters — bounded by
+    construction, and a key-derivation bug here is a compile leak.
+  * ``executor_scenario`` — ``deploy.execute`` over compiled CNN-A and
+    MobileNet programs with a *fixed rotation* of §IV-D schedules (global
+    ints + per-layer lists).  Distinct schedules each compile once; the
+    rotation re-visits them so the trace-entry counter must freeze after
+    the first lap.
+  * ``checkpoint_scenario`` — the ``save_program``/``load_program`` cycle
+    through ``checkpoint/manager.py``: repeated checkpointing must neither
+    grow the python heap (manifest/array copies) nor the on-disk step count
+    (the manager's ``keep`` GC is the gauge).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable
+
+import numpy as np
+
+_DEFAULT = object()
+
+
+@dataclasses.dataclass
+class Scenario:
+    """A soak workload: ``step(i)`` plus flat-by-contract gauges."""
+
+    name: str
+    step: Callable[[int], None]
+    gauges: dict[str, Callable[[], float]]
+    # scenario-specific counters for acceptance asserts (e.g. decode steps)
+    progress: Callable[[], dict]
+
+
+# ---------------------------------------------------------------------------
+# launch/serve.py under mixed traffic
+# ---------------------------------------------------------------------------
+
+def server_scenario(*, family: str = "gemma_2b", max_batch: int = 4,
+                    max_len: int = 64, seed: int = 0) -> Scenario:
+    """Continuous mixed per-request ``m_active`` + bucketed-prefill traffic.
+
+    The admission pattern cycles prompt lengths {3, 5, 7, 9} (pow2 buckets
+    2/4/8) x ``m_active`` {None, 1} so every soak step exercises grouped
+    decode with two level-count groups and the prefill-length bucket map.
+    """
+    import jax
+
+    from repro.configs import base as cb
+    from repro.launch.serve import Request, Server
+    from repro.models import api
+
+    cfg = cb.reduced(cb.get_config(family)).replace(dtype="float32")
+    params = api.init_params(cfg, jax.random.PRNGKey(seed))
+    srv = Server(cfg, params, max_batch=max_batch, max_len=max_len)
+    pattern = [(3, None), (5, 1), (7, None), (9, 1)]
+    counter = [0]
+
+    def admit_to_full():
+        while any(s is None for s in srv.slots):
+            n, m = pattern[counter[0] % len(pattern)]
+            counter[0] += 1
+            ok = srv.admit(Request(
+                prompt=np.arange(1, n + 1, dtype=np.int32),
+                max_new_tokens=4, m_active=m))
+            if not ok:
+                break
+
+    def step(i: int) -> None:
+        admit_to_full()
+        srv.step()
+
+    return Scenario(
+        name=f"server_{family}",
+        step=step,
+        gauges=dict(srv.cache_gauges()),
+        progress=lambda: dict(srv.stats))
+
+
+# ---------------------------------------------------------------------------
+# deploy.execute over compiled programs
+# ---------------------------------------------------------------------------
+
+def _rotating_schedules(program) -> list:
+    """A fixed schedule rotation for one program: all levels, the global
+    §IV-D throughput switch, and two per-layer schedules (front-half vs
+    back-half reduced) — four distinct resolved schedules, re-visited
+    forever, so the executor must stop tracing after one lap."""
+    n = len(program)
+    half = n // 2
+    front = tuple([1] * half + [2] * (n - half))
+    back = tuple([2] * half + [1] * (n - half))
+    scheds = [None, 1, front, back]
+    # dedupe resolved forms (tiny programs may collapse some)
+    seen, out = set(), []
+    for s in scheds:
+        r = program.resolve_schedule(s)
+        if r not in seen:
+            seen.add(r)
+            out.append(s)
+    return out
+
+
+def executor_scenario(*, archs=("cnn_a", "mobilenet"), batch: int = 2,
+                      mobilenet_kw: dict = _DEFAULT,
+                      seed: int = 0) -> Scenario:
+    """Rotate compiled programs x §IV-D schedules through ``deploy.execute``.
+
+    ``archs`` defaults to CNN-A plus the MobileNet (CNN-B) topology; the
+    pytest soak tier runs MobileNet at reduced width/resolution (the same
+    code paths as B2 — dw/pw stacks, gap head — at CPU-interpret-feasible
+    cost) while ``tools/soak.py --mobilenet-b2`` runs the real 224²
+    program on hardware.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import deploy
+    from repro.core.binlinear import QuantConfig
+    from repro.deploy import executor
+    from repro.models import cnn
+
+    if mobilenet_kw is _DEFAULT:
+        mobilenet_kw = {"width_mult": 0.25, "n_classes": 10,
+                        "resolution": 32}
+    qc = QuantConfig(mode="binary", M=2, K_iters=2, interpret=True)
+    work = []
+    key = jax.random.PRNGKey(seed)
+    for arch in archs:
+        key, k1, k2 = jax.random.split(key, 3)
+        if arch == "cnn_a":
+            params = cnn.init_cnn_a(k1)
+            shape = (batch, 48, 48, 3)
+            prog = deploy.compile(cnn.binarize_cnn_a(params, qc), "cnn_a",
+                                  qc, shape)
+        else:
+            res = mobilenet_kw.get("resolution", 32)
+            init_kw = {k: v for k, v in mobilenet_kw.items()
+                       if k != "resolution"}
+            params = cnn.init_mobilenet(k1, **init_kw)
+            shape = (batch, res, res, 3)
+            prog = deploy.compile(cnn.binarize_mobilenet(params, qc),
+                                  "mobilenet", qc, shape)
+        x = jax.random.normal(k2, shape, jnp.float32)
+        for sched in _rotating_schedules(prog):
+            work.append((prog, x, sched))
+    calls = [0]
+
+    def step(i: int) -> None:
+        prog, x, sched = work[(i - 1) % len(work)]
+        jax.block_until_ready(deploy.execute(prog, x, sched))
+        calls[0] += 1
+
+    return Scenario(
+        name="executor_" + "_".join(archs),
+        step=step,
+        gauges=dict(executor.cache_gauges()),
+        progress=lambda: {"execute_calls": calls[0],
+                          **executor.cache_stats()})
+
+
+# ---------------------------------------------------------------------------
+# checkpoint save/load cycle
+# ---------------------------------------------------------------------------
+
+def checkpoint_scenario(directory: str, *, keep: int = 2,
+                        seed: int = 0) -> Scenario:
+    """Repeated ``save_program`` -> ``load_program`` -> execute cycles.
+
+    Gauges: live checkpoint step-dirs on disk (the manager's ``keep`` GC
+    contract) — plus the driver's heap/RSS sampling catches manifest or
+    array-copy leaks in the save path.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import deploy
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.binlinear import QuantConfig
+    from repro.models import cnn
+
+    qc = QuantConfig(mode="binary", M=2, K_iters=2, interpret=True)
+    params = cnn.init_cnn_a(jax.random.PRNGKey(seed))
+    prog = deploy.compile(cnn.binarize_cnn_a(params, qc), "cnn_a", qc,
+                          (1, 48, 48, 3))
+    like = deploy.abstract_program("cnn_a", qc, (1, 48, 48, 3))
+    mgr = CheckpointManager(directory, keep=keep)
+    x = jnp.ones((1, 48, 48, 3), jnp.float32)
+    cycles = [0]
+
+    def live_dirs() -> int:
+        return sum(1 for d in os.listdir(directory) if d.startswith("step_"))
+
+    def step(i: int) -> None:
+        deploy.save_program(mgr, i, prog)
+        back = deploy.load_program(mgr, i, like)
+        jax.block_until_ready(deploy.execute(back, x))
+        cycles[0] += 1
+
+    return Scenario(
+        name="checkpoint_cycle",
+        step=step,
+        gauges={"ckpt_dirs": live_dirs},
+        progress=lambda: {"cycles": cycles[0], "ckpt_dirs": live_dirs()})
+
+
+SCENARIOS = {
+    "server": server_scenario,
+    "executor": executor_scenario,
+    "checkpoint": checkpoint_scenario,
+}

@@ -4,10 +4,15 @@ The container this suite runs in has no network access, so the dev extra
 (``pip install -e .[dev]``) may not be installable.  conftest.py registers
 this module as ``hypothesis`` in that case, covering exactly the surface the
 tests use: ``@settings(max_examples=..., deadline=...)``, ``@given(**kw)``,
-``st.integers(lo, hi)`` and ``st.sampled_from(seq)``.
+``st.integers(lo, hi)``, ``st.sampled_from(seq)``, ``st.booleans()``,
+``st.floats(lo, hi)``, ``st.just(v)``, ``st.lists(elem, ...)``,
+``st.tuples(*elems)``, ``st.one_of(*strats)``, and ``.map(f)``.
 
 Sampling is deterministic (seeded per test name) so runs are reproducible;
 with the real hypothesis installed this module is never imported.
+tests/test_hypothesis_stub.py pins the stub's behavior (determinism, draw
+domains, falsifying-example reporting) so the offline tier and the
+CI-with-real-hypothesis tier exercise the same property surface.
 """
 from __future__ import annotations
 
@@ -20,6 +25,9 @@ class _Strategy:
 
     def example(self, rng: random.Random):
         return self._draw(rng)
+
+    def map(self, f) -> "_Strategy":
+        return _Strategy(lambda rng: f(self._draw(rng)))
 
 
 class strategies:
@@ -39,6 +47,27 @@ class strategies:
     @staticmethod
     def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
         return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size: int = 0,
+              max_size: int = 5) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+    @staticmethod
+    def one_of(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: rng.choice(strats).example(rng))
 
 
 _DEFAULT_MAX_EXAMPLES = 20

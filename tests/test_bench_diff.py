@@ -1,0 +1,190 @@
+"""bench_diff self-tests: the CI perf gate must catch what it claims to.
+
+Three layers:
+
+  * pure ``diff()`` semantics on hand-built documents — directionality
+    (occupancy drops vs VMEM growth), tolerance, coverage (missing rows),
+    verifier findings;
+  * the seeded-regression fixture: take the committed
+    ``BENCH_baseline.json``, degrade one MXU-occupancy figure and grow one
+    VMEM working set, and require the CLI to exit 1 naming both — this is
+    the acceptance proof that the gate is live, not decorative;
+  * schema discipline: mismatched/missing ``meta.schema_version`` is exit
+    2 (refused), and ``--update-baseline`` rewrites the baseline file.
+
+The committed baseline must also diff cleanly against itself (exit 0), so
+a stale baseline or schema drift fails here before it fails in CI.
+"""
+import copy
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+sys.path.insert(0, str(REPO))          # for `import benchmarks.run`
+import bench_diff  # noqa: E402
+BASELINE = REPO / "BENCH_baseline.json"
+
+
+def _doc(**over):
+    base = {
+        "meta": {"schema_version": bench_diff_schema()},
+        "modules": {
+            "kernel": {"structured": [
+                {"name": "conv_tile", "kind": "conv_tile",
+                 "mxu_row_occupancy": 0.9, "vmem_bytes": 100_000},
+                {"name": "dw_tile", "kind": "dw_tile",
+                 "vmem_bytes": 50_000},
+            ]},
+            "serve": {"structured": [
+                {"name": "admit_len8", "device_calls_per_admit": 2.0},
+            ]},
+        },
+        "program": {"cnn_a": {
+            "totals": {"max_vmem_bytes": 200_000, "weight_bytes": 9_000},
+            "layers": [{"name": "conv1", "vmem_bytes": 80_000,
+                        "mxu_row_occupancy": 0.8}],
+        }},
+        "verify": {"cnn_a": {"errors": 0, "warnings": 1,
+                             "by_rule": {}}},
+    }
+    base.update(over)
+    return base
+
+
+def bench_diff_schema():
+    import importlib
+
+    run = importlib.import_module("benchmarks.run")
+    return run.SCHEMA_VERSION
+
+
+def test_identical_docs_no_regressions():
+    d = _doc()
+    assert bench_diff.diff(d, copy.deepcopy(d)) == []
+
+
+def test_occupancy_drop_is_regression_and_gain_is_not():
+    base = _doc()
+    worse = copy.deepcopy(base)
+    worse["modules"]["kernel"]["structured"][0]["mxu_row_occupancy"] = 0.7
+    regs = [d for d in bench_diff.diff(base, worse) if d.regression]
+    assert [d.path for d in regs] == ["kernel/conv_tile/mxu_row_occupancy"]
+    better = copy.deepcopy(base)
+    better["modules"]["kernel"]["structured"][0]["mxu_row_occupancy"] = 0.95
+    deltas = bench_diff.diff(base, better)
+    assert deltas and not any(d.regression for d in deltas)  # benign drift
+
+
+def test_vmem_growth_device_calls_and_totals():
+    base = _doc()
+    worse = copy.deepcopy(base)
+    worse["modules"]["kernel"]["structured"][1]["vmem_bytes"] = 80_000
+    worse["modules"]["serve"]["structured"][0]["device_calls_per_admit"] = 3.0
+    worse["program"]["cnn_a"]["totals"]["max_vmem_bytes"] = 400_000
+    paths = {d.path for d in bench_diff.diff(base, worse) if d.regression}
+    assert paths == {"kernel/dw_tile/vmem_bytes",
+                     "serve/admit_len8/device_calls_per_admit",
+                     "program/cnn_a/totals/max_vmem_bytes"}
+
+
+def test_small_drift_within_tolerance_is_not_regression():
+    base = _doc()
+    close = copy.deepcopy(base)
+    close["modules"]["kernel"]["structured"][0]["vmem_bytes"] = 100_500
+    assert not any(d.regression
+                   for d in bench_diff.diff(base, close, rel_tol=0.01))
+    assert any(d.regression
+               for d in bench_diff.diff(base, close, rel_tol=0.001))
+
+
+def test_missing_row_and_new_verifier_findings():
+    base = _doc()
+    worse = copy.deepcopy(base)
+    del worse["modules"]["kernel"]["structured"][1]          # dropped bench
+    worse["verify"]["cnn_a"]["errors"] = 2                   # new ERRORs
+    regs = {d.path: d for d in bench_diff.diff(base, worse) if d.regression}
+    assert "kernel/dw_tile" in regs
+    assert regs["kernel/dw_tile"].metric == "coverage"
+    assert "verify/cnn_a/errors" in regs
+    # warnings above baseline regress too; at-or-below does not
+    warn = copy.deepcopy(base)
+    warn["verify"]["cnn_a"]["warnings"] = 2
+    assert any(d.path == "verify/cnn_a/warnings" and d.regression
+               for d in bench_diff.diff(base, warn))
+    assert not any(d.regression for d in bench_diff.diff(
+        base, copy.deepcopy(base) | {}))
+
+
+def test_schema_mismatch_refused():
+    base, cand = _doc(), _doc()
+    cand["meta"]["schema_version"] = bench_diff_schema() + 1
+    with pytest.raises(bench_diff.SchemaMismatch):
+        bench_diff.check_schemas(base, cand)
+    cand2 = _doc()
+    del cand2["meta"]["schema_version"]
+    with pytest.raises(bench_diff.SchemaMismatch):
+        bench_diff.check_schemas(base, cand2)
+
+
+# ---------------------------------------------------------------------------
+# CLI against the committed baseline
+# ---------------------------------------------------------------------------
+
+def _committed():
+    if not BASELINE.exists():
+        pytest.skip("BENCH_baseline.json not generated yet")
+    return json.loads(BASELINE.read_text())
+
+
+def test_committed_baseline_passes_against_itself(tmp_path):
+    doc = _committed()
+    assert doc["meta"]["schema_version"] == bench_diff_schema()
+    cand = tmp_path / "cand.json"
+    cand.write_text(json.dumps(doc))
+    assert bench_diff.main([str(BASELINE), str(cand)]) == 0
+
+
+def _first_row_with(doc, module, field):
+    for row in doc["modules"][module]["structured"]:
+        if isinstance(row.get(field), (int, float)) and row[field]:
+            return row
+    raise AssertionError(
+        f"committed baseline has no {module} row with {field!r} — the "
+        "seeded-regression fixture lost its target")
+
+
+def test_seeded_regression_fixture_fails_cli(tmp_path, capsys):
+    """Acceptance check: degrade the committed baseline and the gate fires."""
+    doc = _committed()
+    _first_row_with(doc, "kernel", "mxu_row_occupancy")[
+        "mxu_row_occupancy"] *= 0.5                     # occupancy drop
+    _first_row_with(doc, "kernel", "vmem_bytes")["vmem_bytes"] *= 4  # growth
+    cand = tmp_path / "seeded.json"
+    cand.write_text(json.dumps(doc))
+    rc = bench_diff.main([str(BASELINE), str(cand),
+                          "--json", str(tmp_path / "deltas.json")])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "mxu_row_occupancy" in out and "vmem_bytes" in out
+    dumped = json.loads((tmp_path / "deltas.json").read_text())
+    assert len(dumped["regressions"]) >= 2
+
+
+def test_schema_mismatch_exits_2_and_update_baseline(tmp_path, capsys):
+    doc = _committed()
+    doc["meta"]["schema_version"] = 999
+    cand = tmp_path / "newschema.json"
+    cand.write_text(json.dumps(doc))
+    moving_base = tmp_path / "base.json"
+    moving_base.write_text(BASELINE.read_text())
+    assert bench_diff.main([str(moving_base), str(cand)]) == 2
+    assert "refusing to compare" in capsys.readouterr().err
+    # the explicit human path: --update-baseline rewrites and exits 0
+    assert bench_diff.main([str(moving_base), str(cand),
+                            "--update-baseline"]) == 0
+    assert json.loads(moving_base.read_text())[
+        "meta"]["schema_version"] == 999

@@ -1,0 +1,56 @@
+"""Soak tier (``-m soak``): thousands of steps, asserted-flat trends.
+
+Each test drives one long-lived serving surface (repro.testing.scenarios)
+through ``repro.testing.soak.run_soak`` and calls ``assert_flat()``: after
+the warmup window, RSS, tracemalloc heap, and per-step latency must fit a
+near-zero linear slope, and every compile-cache gauge must end exactly
+where it started.  A leak in the jitted-closure caches, the executor's
+trace-key derivation, or the checkpoint manager shows up here as a
+TrendViolation naming the metric and its projected growth.
+
+Deliberately excluded from the fast tier (see pyproject markers): minutes
+of wall clock.  CI runs these nightly (tools/soak.py writes the trend CSVs
+the workflow uploads); this pytest form is the local/acceptance entry.
+"""
+import pytest
+
+from repro.testing import scenarios as sc
+from repro.testing.soak import run_soak
+
+pytestmark = pytest.mark.soak
+
+
+def test_server_soak_mixed_traffic():
+    scen = sc.server_scenario()
+    # each soak step = one decode round serving TWO m_active groups
+    # (None + 1), so 1100 steps ~= 2200 decode_steps — clears the >=2000
+    # acceptance floor with margin
+    result = run_soak(scen.step, steps=1100, name=scen.name,
+                      gauges=scen.gauges)
+    stats = scen.progress()
+    assert stats["decode_steps"] >= 2000, stats
+    assert stats["bulk_prefills"] > 100, stats
+    # bounded compile caches: 2 m_active variants x decode/prefill, and
+    # the pow2 bucket map stays at the handful of lengths the traffic uses
+    result.assert_flat()
+
+
+def test_executor_soak_rotating_schedules():
+    scen = sc.executor_scenario()
+    result = run_soak(scen.step, steps=520, name=scen.name,
+                      gauges=scen.gauges)
+    stats = scen.progress()
+    assert stats["execute_calls"] >= 500, stats
+    # the schedule rotation re-visits a fixed set of resolved schedules:
+    # every variant traced during warmup, then the counter froze
+    result.assert_flat()
+
+
+def test_checkpoint_soak_save_load_cycle(tmp_path):
+    scen = sc.checkpoint_scenario(str(tmp_path / "ckpt"))
+    result = run_soak(scen.step, steps=120, name=scen.name,
+                      gauges=scen.gauges)
+    stats = scen.progress()
+    assert stats["cycles"] >= 120, stats
+    assert stats["ckpt_dirs"] <= 2, stats       # keep=2 GC held
+    result.assert_flat()

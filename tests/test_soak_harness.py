@@ -1,0 +1,102 @@
+"""Fast unit tests for the soak driver itself (repro.testing.soak).
+
+Synthetic step closures — no jax, no server — prove the trend machinery:
+flat workloads pass, each leak class (python heap, gauge, latency) raises
+a TrendViolation naming the guilty series, warmup samples are excluded,
+and the CSV artifact round-trips.  The real scenarios run in the ``soak``
+tier (tests/test_soak.py); these tests are what lets the fast tier trust
+that a green soak run actually asserted something.
+"""
+import csv
+
+import numpy as np
+import pytest
+
+from repro.testing import soak
+
+
+def _result(*, steps=1000, rss=None, traced=None, latency=None, gauges=None):
+    """Hand-built SoakResult over 50 sample points."""
+    xs = np.linspace(20, steps, 50).astype(np.int64)
+    z = np.zeros(50)
+    return soak.SoakResult(
+        name="synthetic", total_steps=steps, steps=xs,
+        rss=np.asarray(rss if rss is not None else z, np.float64),
+        traced=np.asarray(traced if traced is not None else z, np.float64),
+        latency=np.asarray(latency if latency is not None else z + 1e-3,
+                           np.float64),
+        gauges={n: np.asarray(v, np.float64)
+                for n, v in (gauges or {}).items()})
+
+
+def test_flat_run_passes():
+    rng = np.random.default_rng(0)
+    _result(rss=1e8 + rng.normal(0, 1e4, 50),
+            traced=5e6 + rng.normal(0, 1e3, 50),
+            latency=1e-3 + rng.normal(0, 1e-6, 50),
+            gauges={"cache": np.full(50, 4.0)}).assert_flat()
+
+
+def test_python_heap_leak_raises():
+    leak = 5e6 + np.linspace(0, 64e6, 50)          # ~64 MiB over the run
+    with pytest.raises(soak.TrendViolation, match="traced python heap"):
+        _result(traced=leak).assert_flat()
+
+
+def test_gauge_leak_raises_even_by_one_entry():
+    g = np.full(50, 4.0)
+    g[-5:] = 5.0                                   # one late extra entry
+    with pytest.raises(soak.TrendViolation, match="cache leak"):
+        _result(gauges={"decode_fns": g}).assert_flat()
+
+
+def test_latency_creep_raises():
+    lat = 1e-3 * (1 + np.linspace(0, 2.0, 50))     # 3x slowdown
+    with pytest.raises(soak.TrendViolation, match="step latency"):
+        _result(latency=lat).assert_flat()
+
+
+def test_warmup_window_is_excluded():
+    # big ramp confined to the first 20% of samples, flat afterwards:
+    # must pass, because warmup compiles/arena growth look exactly like this
+    traced = np.full(50, 30e6)
+    traced[:10] = np.linspace(1e6, 30e6, 10)
+    _result(traced=traced).assert_flat()
+
+
+def test_run_soak_samples_and_detects_real_leak():
+    sink = []
+
+    def leaky(i):
+        sink.append(bytearray(64 * 1024))          # 64 KiB per step
+
+    res = soak.run_soak(leaky, steps=300, name="leaky", sample_every=10)
+    assert len(res.steps) == 30
+    with pytest.raises(soak.TrendViolation):
+        res.assert_flat(traced_tol_bytes=1e6)
+    # and a no-op workload is flat under the same tolerances
+    soak.run_soak(lambda i: None, steps=300, name="idle",
+                  sample_every=10).assert_flat(traced_tol_bytes=1e6)
+
+
+def test_write_csv_roundtrip(tmp_path):
+    res = soak.run_soak(lambda i: None, steps=64, name="csv",
+                        sample_every=8,
+                        gauges={"g": lambda: 3.0})
+    path = tmp_path / "trend.csv"
+    res.write_csv(str(path))
+    rows = list(csv.DictReader(path.open()))
+    assert len(rows) == len(res.steps)
+    assert set(rows[0]) == {"step", "rss_bytes", "traced_bytes",
+                            "latency_s", "g"}
+    assert all(float(r["g"]) == 3.0 for r in rows)
+    assert int(rows[-1]["step"]) == 64
+
+
+def test_rss_bytes_reads_something():
+    # on linux this is /proc/self/statm; anywhere else psutil or 0 — the
+    # contract is "non-negative int, stable within a few pages across calls"
+    a, b = soak.rss_bytes(), soak.rss_bytes()
+    assert a >= 0 and b >= 0
+    if a:
+        assert abs(a - b) < 64 * 2**20

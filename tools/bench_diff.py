@@ -1,0 +1,241 @@
+"""CI perf gate: diff two ``benchmarks/run.py --json`` documents.
+
+    python tools/bench_diff.py BASELINE.json CANDIDATE.json
+                               [--rel-tol 0.01] [--update-baseline]
+                               [--json PATH]
+
+Compares only the *structural* metrics — analytic VMEM working sets, HBM
+bytes, MXU occupancy/utilization, device-call counts, compiler tile plans,
+verifier findings.  Wall-clock columns (``us_per_call``) are CPU
+interpret-mode noise and are never compared.  The comparison is
+directional, encoded as data in :data:`METRIC_DIRECTIONS`:
+
+  * ``higher``-is-better metrics (occupancy, utilization) regress when the
+    candidate drops more than ``--rel-tol`` below the baseline;
+  * ``lower``-is-better metrics (VMEM/HBM bytes, device calls, error
+    counts) regress when the candidate grows more than ``--rel-tol``;
+  * rows present in the baseline but missing from the candidate are
+    coverage regressions (a silently-dropped bench can hide anything);
+  * any ERROR finding in the candidate's verify section, or a WARN count
+    above baseline, is a regression (new verifier findings).
+
+Schema discipline: both documents must carry ``meta.schema_version`` and
+they must match — otherwise exit 2 (*refused*, not compared).  The
+explicit ``--update-baseline`` path copies the candidate over the baseline
+after a human decided the change is intended (docs/testing.md documents
+the workflow).
+
+Exit codes: 0 clean, 1 regression(s), 2 schema mismatch / unusable input.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import shutil
+import sys
+
+# metric name -> which direction is GOOD.  Anything not listed is
+# informational only (plans, shapes, counts that have no better/worse).
+METRIC_DIRECTIONS = {
+    # kernel structured rows + program layer stats
+    "mxu_row_occupancy": "higher",
+    "batch_row_utilization": "higher",
+    "vmem_bytes": "lower",
+    "vmem_whole_bytes": "lower",
+    "hbm_fused_bytes": "lower",
+    "hbm_im2col_bytes": "lower",
+    "weight_bytes": "lower",
+    # serve structured rows
+    "device_calls_per_admit": "lower",
+    # program totals
+    "max_vmem_bytes": "lower",
+    # verify summaries
+    "errors": "lower",
+    "warnings": "lower",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Delta:
+    """One compared metric: where, what, and whether it regressed."""
+
+    path: str          # e.g. "kernel/conv_mnet_b2_pw0/vmem_bytes"
+    metric: str
+    base: float
+    cand: float
+    regression: bool
+    note: str = ""
+
+    def __str__(self) -> str:
+        tag = "REGRESSION" if self.regression else "ok"
+        extra = f" ({self.note})" if self.note else ""
+        return f"{tag:10s} {self.path}: {self.base:g} -> {self.cand:g}{extra}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _regressed(metric: str, base: float, cand: float, rel_tol: float) -> bool:
+    direction = METRIC_DIRECTIONS.get(metric)
+    if direction is None or base is None or cand is None:
+        return False
+    scale = max(abs(base), 1e-12)
+    if direction == "higher":
+        return cand < base - rel_tol * scale
+    return cand > base + rel_tol * scale
+
+
+def _walk_numeric(prefix: str, base: dict, cand: dict, rel_tol: float,
+                  out: list[Delta]) -> None:
+    """Compare every direction-listed numeric key present in both dicts."""
+    for key, bval in base.items():
+        if key not in METRIC_DIRECTIONS:
+            continue
+        cval = cand.get(key)
+        if not isinstance(bval, (int, float)) or not isinstance(
+                cval, (int, float)):
+            continue
+        reg = _regressed(key, float(bval), float(cval), rel_tol)
+        if reg or bval != cval:
+            out.append(Delta(f"{prefix}/{key}", key, float(bval),
+                             float(cval), reg))
+
+
+def _rows_by_name(doc: dict, module: str) -> dict:
+    rows = (doc.get("modules", {}).get(module, {}) or {}).get(
+        "structured") or []
+    return {r.get("name", f"row{i}"): r for i, r in enumerate(rows)}
+
+
+def diff(base: dict, cand: dict, *, rel_tol: float = 0.01) -> list[Delta]:
+    """All deltas between two bench documents (schema already validated)."""
+    out: list[Delta] = []
+    # --- structured module rows (kernel, serve, ...) ---
+    for module in sorted(set(base.get("modules", {}))
+                         | set(cand.get("modules", {}))):
+        b_rows, c_rows = _rows_by_name(base, module), _rows_by_name(
+            cand, module)
+        for name, b_row in b_rows.items():
+            c_row = c_rows.get(name)
+            if c_row is None:
+                out.append(Delta(f"{module}/{name}", "coverage", 1.0, 0.0,
+                                 True, "row missing from candidate"))
+                continue
+            _walk_numeric(f"{module}/{name}", b_row, c_row, rel_tol, out)
+            # nested plan dicts etc. are informational; layer rows inline
+            # their stats so _walk_numeric covers them
+    # --- program section: totals + per-layer stats ---
+    b_prog, c_prog = base.get("program", {}), cand.get("program", {})
+    for prog in sorted(set(b_prog) & set(c_prog)):
+        if "totals" not in b_prog[prog] or "totals" not in c_prog[prog]:
+            continue
+        _walk_numeric(f"program/{prog}/totals", b_prog[prog]["totals"],
+                      c_prog[prog]["totals"], rel_tol, out)
+        b_layers = {s["name"]: s for s in b_prog[prog].get("layers", [])}
+        c_layers = {s["name"]: s for s in c_prog[prog].get("layers", [])}
+        for lname, b_layer in b_layers.items():
+            c_layer = c_layers.get(lname)
+            if c_layer is None:
+                out.append(Delta(f"program/{prog}/{lname}", "coverage",
+                                 1.0, 0.0, True,
+                                 "layer missing from candidate"))
+                continue
+            _walk_numeric(f"program/{prog}/{lname}", b_layer, c_layer,
+                          rel_tol, out)
+    # --- verify section: no new findings, ever ---
+    b_ver, c_ver = base.get("verify", {}), cand.get("verify", {})
+    for prog in sorted(set(k for k in c_ver
+                           if isinstance(c_ver[k], dict)
+                           and "errors" in c_ver[k])):
+        c_sum = c_ver[prog]
+        b_sum = b_ver.get(prog, {"errors": 0, "warnings": 0})
+        if c_sum.get("errors", 0) > 0:
+            out.append(Delta(f"verify/{prog}/errors", "errors",
+                             float(b_sum.get("errors", 0)),
+                             float(c_sum["errors"]), True,
+                             "candidate has ERROR findings"))
+        elif c_sum.get("warnings", 0) > b_sum.get("warnings", 0):
+            out.append(Delta(f"verify/{prog}/warnings", "warnings",
+                             float(b_sum.get("warnings", 0)),
+                             float(c_sum["warnings"]), True,
+                             "new verifier WARN findings"))
+    return out
+
+
+class SchemaMismatch(ValueError):
+    """The two documents cannot be compared (refuse, don't guess)."""
+
+
+def check_schemas(base: dict, cand: dict) -> None:
+    b = (base.get("meta") or {}).get("schema_version")
+    c = (cand.get("meta") or {}).get("schema_version")
+    if b is None or c is None:
+        raise SchemaMismatch(
+            "missing meta.schema_version "
+            f"(baseline={b!r}, candidate={c!r}); regenerate with the "
+            "current benchmarks/run.py --json")
+    if b != c:
+        raise SchemaMismatch(
+            f"schema_version mismatch: baseline={b!r} candidate={c!r}; "
+            "refusing to compare — update the baseline with "
+            "tools/bench_diff.py --update-baseline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("candidate", help="freshly produced BENCH_*.json")
+    ap.add_argument("--rel-tol", type=float, default=0.01,
+                    help="relative tolerance per metric (default 1%%)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy candidate over baseline and exit 0 "
+                         "(the intended-change path)")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also dump all deltas as JSON")
+    args = ap.parse_args(argv)
+
+    base_path = pathlib.Path(args.baseline)
+    cand_path = pathlib.Path(args.candidate)
+    try:
+        cand = json.loads(cand_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read candidate {cand_path}: {e}",
+              file=sys.stderr)
+        return 2
+    if args.update_baseline:
+        shutil.copyfile(cand_path, base_path)
+        print(f"bench_diff: baseline updated from {cand_path} "
+              f"(sha {(cand.get('meta') or {}).get('git_sha', '?')})")
+        return 0
+    try:
+        base = json.loads(base_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read baseline {base_path}: {e}",
+              file=sys.stderr)
+        return 2
+    try:
+        check_schemas(base, cand)
+    except SchemaMismatch as e:
+        print(f"bench_diff: {e}", file=sys.stderr)
+        return 2
+
+    deltas = diff(base, cand, rel_tol=args.rel_tol)
+    regressions = [d for d in deltas if d.regression]
+    drifts = [d for d in deltas if not d.regression]
+    for d in regressions + drifts:
+        print(d)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"regressions": [d.as_dict() for d in regressions],
+                       "drift": [d.as_dict() for d in drifts]},
+                      f, indent=1, sort_keys=True)
+    print(f"bench_diff: {'FAIL' if regressions else 'OK'} "
+          f"({len(regressions)} regression(s), {len(drifts)} benign "
+          f"drift(s); rel_tol={args.rel_tol})")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

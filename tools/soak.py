@@ -1,0 +1,113 @@
+"""Nightly soak CLI: run long-lived-surface scenarios, assert flat trends.
+
+    PYTHONPATH=src python tools/soak.py [server executor checkpoint ...]
+        [--steps N] [--csv-dir DIR] [--mobilenet-b2] [--list]
+
+Each scenario (repro.testing.scenarios.SCENARIOS) wraps one long-lived
+serving surface — the launch server under mixed m_active/prefill traffic,
+``deploy.execute`` over rotating §IV-D schedules, the checkpoint
+save/load cycle — as a step closure plus cache-size gauges.  This driver
+runs each through ``repro.testing.soak.run_soak`` and calls
+``SoakResult.assert_flat()``: RSS, traced-heap, and latency must fit a
+flat linear trend after warmup, and every cache gauge must end exactly
+where it started (a growing jit cache IS the leak we're hunting).
+
+``--csv-dir`` writes one ``<scenario>_trend.csv`` per run for CI artifact
+upload (step, rss_bytes, traced_bytes, latency_s + gauge columns), so a
+slow creep that stays inside one night's tolerance is still visible
+across nights.  ``--mobilenet-b2`` swaps the executor scenario's reduced
+MobileNet for the full B2 @224² — minutes per call under CPU interpret
+mode, meant for real accelerator hardware only.
+
+Exit codes: 0 all flat, 1 any TrendViolation (message names the metric,
+slope, and projected growth).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT / "src"), str(_ROOT)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+# default step counts per scenario: sized so the full run is minutes on
+# CPU interpret mode while still clearing the acceptance floors
+# (>= 2000 server decode steps, >= 500 executor calls).  One server soak
+# step admits/retires a whole request group, so 1100 steps ~= 2200 decodes.
+DEFAULT_STEPS = {"server": 1100, "executor": 260, "checkpoint": 120}
+
+
+def main(argv=None) -> int:
+    from repro.testing import scenarios as sc
+    from repro.testing.soak import TrendViolation, run_soak
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("scenarios", nargs="*", default=[],
+                    metavar="SCENARIO",
+                    help=f"which to run (default: all of "
+                         f"{sorted(sc.SCENARIOS)})")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="override step count for every selected scenario")
+    ap.add_argument("--csv-dir", default="", metavar="DIR",
+                    help="write <scenario>_trend.csv files here")
+    ap.add_argument("--mobilenet-b2", action="store_true",
+                    help="executor scenario uses full MobileNet-B2 @224^2 "
+                         "(hardware only; minutes/call under interpret)")
+    ap.add_argument("--list", action="store_true",
+                    help="list scenarios and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in sorted(sc.SCENARIOS):
+            print(name)
+        return 0
+    names = args.scenarios or sorted(sc.SCENARIOS)
+    unknown = [n for n in names if n not in sc.SCENARIOS]
+    if unknown:
+        ap.error(f"unknown scenario(s) {unknown}; choose from "
+                 f"{sorted(sc.SCENARIOS)}")
+
+    csv_dir = pathlib.Path(args.csv_dir) if args.csv_dir else None
+    if csv_dir:
+        csv_dir.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for name in names:
+        steps = args.steps or DEFAULT_STEPS.get(name, 200)
+        print(f"== soak: {name} ({steps} steps) ==", flush=True)
+        if name == "executor" and args.mobilenet_b2:
+            scen = sc.executor_scenario(
+                mobilenet_kw={"width_mult": 1.0, "n_classes": 1000,
+                              "resolution": 224})
+        elif name == "checkpoint":
+            import tempfile
+
+            tmp = tempfile.mkdtemp(prefix="soak_ckpt_")
+            scen = sc.SCENARIOS[name](directory=tmp)
+        else:
+            scen = sc.SCENARIOS[name]()
+        result = run_soak(scen.step, steps=steps, name=name,
+                          gauges=scen.gauges)
+        if csv_dir:
+            result.write_csv(csv_dir / f"{name}_trend.csv")
+        print(result.summary(), flush=True)
+        if scen.progress is not None:
+            print(f"   progress: {scen.progress()}", flush=True)
+        try:
+            result.assert_flat()
+            print(f"   {name}: FLAT", flush=True)
+        except TrendViolation as e:
+            failures.append((name, str(e)))
+            print(f"   {name}: VIOLATION — {e}", flush=True)
+    if failures:
+        print(f"soak: {len(failures)} scenario(s) violated flat-trend "
+              "tolerances", file=sys.stderr)
+        return 1
+    print("soak: all trends flat")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,21 @@
-"""Serving admission-latency bench: bulk prefill vs token-wise warmup.
+"""Serving benches: LM admission latency + CNN SLO degradation under load.
 
-Admission used to cost O(prompt_len) jitted decode steps per request
-(token-wise cache warmup); bulk prefill replaces that with ONE forward pass
-plus a cache scatter (launch/serve.py).  CPU wall times are not
-TPU-indicative; the structural column is ``device_calls`` — the number of
-device programs an admission dispatches, recorded from ``Server.stats``
+**Admission** — admission used to cost O(prompt_len) jitted decode steps
+per request (token-wise cache warmup); bulk prefill replaces that with ONE
+forward pass plus a cache scatter (launch/serve.py).  CPU wall times are
+not TPU-indicative; the structural column is ``device_calls`` — the number
+of device programs an admission dispatches, recorded from ``Server.stats``
 (1 bulk prefill vs prompt_len-1 token-wise steps).
+
+**CNN SLO** — p50/p99 latency vs offered load for the SLO-governed CNN
+service (repro.serve_cnn), plus its degradation histogram and shed
+fraction.  The simulation runs entirely on a virtual clock with a §IV-E
+cost-model executor (batch service time proportional to
+``slo.schedule_cost`` of the served rung), so every number is a
+deterministic function of the policy — machine-independent, which is what
+lets ``tools/bench_diff.py`` gate on them: a controller change that raises
+p99 under overload, sheds more, or completes less is a policy regression
+CI catches.
 """
 from __future__ import annotations
 
@@ -31,6 +41,88 @@ def _admit_time(srv: Server, prompt: np.ndarray, iters: int) -> float:
 
 
 _CACHE: dict = {}
+
+# virtual-time constants for the CNN SLO simulation: one ingest frame per
+# step plus a batch service time that scales with the served rung's
+# schedule_cost.  EXEC_FULL_S sits just under the 10 ms target so the
+# low-load case is calm at full-M and the overload case (queue wait added)
+# is decisively over it.
+_CNN_FRAME_S = 0.002
+_CNN_EXEC_FULL_S = 0.009
+_CNN_TARGET_MS = 10.0
+_CNN_STEPS = 120
+
+
+def _cnn_slo_rows():
+    """CNN SLO bench: p50/p99 virtual latency + shed/degraded fractions at
+    two offered loads.  Entirely deterministic — ManualClock, cost-model
+    executor, zero images — so the numbers are a pure function of the
+    ladder + controller policy and bench_diff can gate on them."""
+    from repro.serve_cnn import CNNService, SLOConfig, schedule_cost
+    from repro.testing.faults import ManualClock
+    from repro.testing.scenarios import tiny_cnn_program
+
+    program = tiny_cnn_program(batch=4)
+    full_cost = schedule_cost(program, None)
+    img = np.zeros(tuple(program.input_shape[1:]), np.float32)
+    # logits shape from one real (clean) execute; the simulation itself
+    # never touches the device — its executor only advances the clock
+    from repro import deploy
+
+    probe = np.asarray(deploy.execute(
+        program, np.zeros(tuple(program.input_shape), np.float32)))
+    out_tail = probe.shape[1:]
+
+    rows, structured = [], []
+    # low: under capacity (batch_size=4/step) -> calm at full-M.
+    # high: 2.5x capacity -> queue wait blows the target, the controller
+    # walks the ladder and sheds; the histogram shows the whole response.
+    for label, offered in (("low", 2), ("high", 10)):
+        clock = ManualClock()
+
+        def execute_fn(prog, x, m_active=None, *, interpret=None,
+                       _clock=clock):
+            cost = schedule_cost(prog, m_active)
+            _clock.advance(_CNN_EXEC_FULL_S * cost / full_cost)
+            return np.zeros((x.shape[0],) + out_tail, np.float32)
+
+        svc = CNNService(
+            program,
+            slo=SLOConfig(target_ms=_CNN_TARGET_MS, window=16,
+                          min_samples=4, recover_after=2),
+            batch_size=4, max_queue=16,
+            clock=clock, sleep=clock.sleep, execute_fn=execute_fn)
+        for _ in range(_CNN_STEPS):
+            clock.advance(_CNN_FRAME_S)
+            for _r in range(offered):
+                svc.submit(img)
+            svc.step()
+        svc.drain()
+        s = svc.stats
+        submitted = s["admitted"] + s["shed_count"]
+        degraded = sum(v for k, v in s["rung_hist"].items() if k > 0)
+        shed_fraction = round(s["shed_count"] / submitted, 4)
+        degraded_fraction = round(degraded / s["batches"], 4)
+        p50_ms = round(s["p50_latency_s"] * 1e3, 3)
+        p99_ms = round(s["p99_latency_s"] * 1e3, 3)
+        rows.append((
+            f"serve_cnn_slo_{label}", s["p99_latency_s"],
+            f"offered={offered}/step p50={p50_ms}ms "
+            f"shed={shed_fraction:.0%} degraded={degraded_fraction:.0%} "
+            f"rungs={sorted(s['rung_hist'])}",
+        ))
+        structured.append({
+            "name": f"serve_cnn_slo_{label}", "kind": "cnn_slo",
+            "offered_per_step": offered, "steps": _CNN_STEPS,
+            "target_ms": _CNN_TARGET_MS,
+            "p50_virtual_ms": p50_ms, "p99_virtual_ms": p99_ms,
+            "shed_fraction": shed_fraction,
+            "degraded_fraction": degraded_fraction,
+            "completed": s["completed"],
+            "rung_hist": {str(k): v
+                          for k, v in sorted(s["rung_hist"].items())},
+        })
+    return rows, structured
 
 
 def _bench(quick: bool):
@@ -62,6 +154,12 @@ def _bench(quick: bool):
                 "name": f"serve_admit_{mode}_{fam}", "kind": "admission",
                 "prompt_len": prompt_len,
                 "device_calls_per_admit": per_admit})
+    # CNN SLO section: deterministic regardless of quick (virtual clock),
+    # so the quick-generated committed baseline gates full runs too.
+    # Its secs column is the *virtual* p99 — policy output, not wall time.
+    cnn_rows, cnn_structured = _cnn_slo_rows()
+    rows.extend(cnn_rows)
+    structured.extend(cnn_structured)
     _CACHE[quick] = (rows, structured)
     return _CACHE[quick]
 

@@ -9,14 +9,14 @@
 
 See docs/deploy.md for the compile → inspect → execute lifecycle.
 """
-from repro.deploy.compiler import (abstract_program, compile, load_program,
-                                   save_program)
+from repro.deploy.compiler import (ProgramIntegrityError, abstract_program,
+                                   compile, load_program, save_program)
 from repro.deploy.executor import execute
 from repro.deploy.program import (BinArrayProgram, ConvInstr, DWConvInstr,
                                   LayerStats, LinearInstr, TilePlan)
 
 __all__ = [
     "BinArrayProgram", "ConvInstr", "DWConvInstr", "LinearInstr",
-    "LayerStats", "TilePlan", "abstract_program", "compile", "execute",
-    "load_program", "save_program",
+    "LayerStats", "ProgramIntegrityError", "TilePlan", "abstract_program",
+    "compile", "execute", "load_program", "save_program",
 ]

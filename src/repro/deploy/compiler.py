@@ -283,10 +283,43 @@ def save_program(manager, step: int, program: BinArrayProgram, *,
     return manager.save(step, {"program": program}, extra=meta)
 
 
-def load_program(manager, step: int, like: BinArrayProgram) -> BinArrayProgram:
+class ProgramIntegrityError(ValueError):
+    """A restored program failed static verification — a corrupt, truncated,
+    or stale checkpoint that must not reach ``execute``.  Carries the ERROR
+    :class:`~repro.analysis.verify.Finding`s as ``.findings``."""
+
+    def __init__(self, message: str, findings=()):
+        super().__init__(message)
+        self.findings = tuple(findings)
+
+
+def load_program(manager, step: int, like: BinArrayProgram, *,
+                 verify: bool = True) -> BinArrayProgram:
     """Restore a program saved with :func:`save_program`.  ``like`` supplies
     the structure + plans — typically :func:`abstract_program` with the same
     arch/quant/input_shape (compilation is deterministic, so the treedefs
-    match) or any same-shaped compiled program."""
+    match) or any same-shaped compiled program.
+
+    By default the restored program is re-verified
+    (``repro.analysis.verify_program``) and any ERROR finding raises
+    :class:`ProgramIntegrityError` — a torn read, a truncated leaf, or a
+    checkpoint from a stale layout fails loudly HERE, not as garbage logits
+    (or an opaque Mosaic fault) at execute time.  ``verify=False`` opts out
+    for hot loops that verify out of band (the fuzz tier compiles, verifies,
+    and round-trips thousands of programs per run).
+    """
     restored, _ = manager.restore(step, {"program": like})
-    return restored["program"]
+    program = restored["program"]
+    if verify:
+        # deferred import, same reason as compile(verify=True)
+        from repro.analysis.verify import verify_program
+
+        errors = [f for f in verify_program(program)
+                  if f.severity == "ERROR"]
+        if errors:
+            raise ProgramIntegrityError(
+                f"restored program (step {step}) failed verification with "
+                f"{len(errors)} ERROR finding(s):\n  "
+                + "\n  ".join(str(f) for f in errors),
+                findings=errors)
+    return program

@@ -23,6 +23,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.deploy.program import (BinArrayProgram, ConvInstr, DWConvInstr,
                                   LinearInstr)
@@ -104,6 +105,32 @@ def _execute_jit(program: BinArrayProgram, x: jax.Array,
     return y
 
 
+def _check_input(program: BinArrayProgram, x) -> None:
+    """Validate ``x`` against ``program.input_shape`` BEFORE the jitted call,
+    so a mis-shaped batch is a one-line ValueError naming both shapes instead
+    of an opaque Mosaic/XLA shape fault from deep inside the first kernel.
+
+    Only ``.shape``/``.dtype`` attributes are read (tracers and
+    ShapeDtypeStructs pass through — trace_lint runs execute under
+    ``jax.make_jaxpr``).  The batch dim is free by contract (the kernels
+    clamp and stay bit-exact across tilings); rank, the per-image dims, and
+    floating dtype are not.
+    """
+    want = tuple(program.input_shape)
+    shape = tuple(getattr(x, "shape", ()))
+    if len(shape) != len(want) or shape[1:] != want[1:]:
+        raise ValueError(
+            f"input shape {shape} does not match program "
+            f"{program.arch!r}: expected (B,{','.join(map(str, want[1:]))}) "
+            f"(compiled input_shape={want}; batch dim is free)")
+    dtype = getattr(x, "dtype", None)
+    if dtype is not None and not jnp.issubdtype(dtype, jnp.floating):
+        raise ValueError(
+            f"input dtype {dtype} is not floating; program "
+            f"{program.arch!r} executes fp activations (cast the batch "
+            "before execute)")
+
+
 def execute(program: BinArrayProgram, x: jax.Array, m_active=None, *,
             interpret: bool | None = None) -> jax.Array:
     """Run the program on a batch.  x: [B, H, W, C] -> logits.
@@ -111,8 +138,11 @@ def execute(program: BinArrayProgram, x: jax.Array, m_active=None, *,
     ``m_active``: None | int | per-instruction sequence (see module doc);
     entries are clamped to each instruction's packed M.  ``interpret``
     overrides the program's compile-time Pallas interpret default (CPU
-    validation vs TPU).
+    validation vs TPU).  Raises ValueError when ``x`` does not match
+    ``program.input_shape`` (any batch size, but rank/H/W/C/floating-dtype
+    must agree — see :func:`_check_input`).
     """
+    _check_input(program, x)
     sched = program.resolve_schedule(m_active)
     itp = program.interpret if interpret is None else interpret
     return _execute_jit(program, x, m_schedule=sched, interpret=itp)

@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable
 
 import jax
@@ -69,6 +70,9 @@ class Request:
     prompt: np.ndarray            # [S] int32
     max_new_tokens: int = 16
     m_active: int | None = None   # paper §IV-D runtime mode (None = all levels)
+    deadline_s: float | None = None  # absolute time.monotonic() deadline;
+    #                                  expired-on-arrival requests are shed
+    #                                  at admit (same contract as serve_cnn)
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     last_logits: np.ndarray | None = None   # [V] logits of the newest token
@@ -134,7 +138,7 @@ class Server:
         self._prefill_lens_seen: set[tuple[int | None, int]] = set()
         self.stats = {"bulk_prefills": 0, "tokenwise_prefill_steps": 0,
                       "decode_steps": 0, "prefill_bucket_hits": 0,
-                      "prefill_unique_lens": 0}
+                      "prefill_unique_lens": 0, "shed_count": 0}
 
     def cache_sizes(self) -> dict:
         """Entry counts of every unbounded-dict-shaped cache the server
@@ -218,11 +222,20 @@ class Server:
     def admit(self, req: Request) -> bool:
         """Place ``req`` in a free slot and prefill it; False when full.
 
+        Admission control mirrors the CNN tier (repro.serve_cnn): a request
+        whose ``deadline_s`` (absolute ``time.monotonic()``) has already
+        expired is *shed* — rejected up front, counted in
+        ``stats["shed_count"]`` — instead of burning a prefill it can never
+        repay.  Both serving tiers report shedding through the same key.
+
         Raises ValueError on malformed requests (empty/oversized prompt, or
         ``m_active < 1`` — the kernel path would silently clamp a 0 to one
         level, which is never what the caller meant; values *above* the
         packed level count M serve full accuracy, documented clamp).
         """
+        if req.deadline_s is not None and req.deadline_s <= time.monotonic():
+            self.stats["shed_count"] += 1
+            return False
         if req.m_active is not None and int(req.m_active) < 1:
             raise ValueError(
                 f"Request.m_active must be >= 1 (got {req.m_active}); use "

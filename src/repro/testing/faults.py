@@ -1,0 +1,180 @@
+"""Deterministic fault injection for the serving/deployment surfaces.
+
+The robustness contract of the CNN service (``repro.serve_cnn``) is that
+every fault is **retried, shed, or degraded — never a silent wrong answer,
+never a stuck queue**.  A contract like that is only testable if faults can
+be produced on demand, at seeded rates, with exact bookkeeping of what was
+injected — which is this module:
+
+  * :class:`FaultPlan` — per-call probabilities for each fault class
+    (latency spike, raised exception, NaN/Inf-corrupted outputs) plus the
+    checkpoint-read truncation rate, all driven by one seeded
+    ``numpy.random.Generator`` so a run replays exactly;
+  * :class:`FaultInjector` — wraps callables: ``wrap_execute`` around the
+    program executor (``repro.deploy.executor.execute`` or any same-shaped
+    function) and ``wrap_restore`` around ``CheckpointManager.restore``.
+    Every injected fault is counted in ``counts`` so tests can reconcile
+    *injected* against *observed* — a fault the service did not account for
+    is a silent swallow and fails the suite;
+  * :func:`inject_faults` — context-manager scoping: patches the executor
+    and checkpoint surfaces module-wide for the duration of the block and
+    restores them on exit (exception-safe), for code paths that cannot take
+    an ``execute_fn`` parameter;
+  * :class:`ManualClock` — a virtual time source (``clock()``/``advance``/
+    ``sleep``) so SLO-controller behavior is testable deterministically:
+    the service takes ``clock=``/``sleep=`` injectables and the bench drives
+    latency with a cost model instead of wall time.
+
+The injector mutates no numerics silently: NaN/Inf corruption touches the
+*returned* array (one poisoned element is enough for ``isfinite`` screens),
+never the packed weights, and the truncation fault shears a leading axis off
+one restored leaf — exactly the damage a torn checkpoint read produces,
+which ``deploy.load_program``'s integrity verification must catch.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """A deterministic, injected executor failure (transient by contract:
+    the next attempt re-draws, so bounded retry is the correct response)."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Per-call fault probabilities.  All rates are independent draws from
+    the injector's seeded stream; a plan with every rate 0 is a no-op wrap
+    (useful for phase-switching soaks: swap plans, keep the stream)."""
+
+    latency_rate: float = 0.0   # sleep latency_s before executing
+    latency_s: float = 0.02
+    error_rate: float = 0.0     # raise InjectedFault instead of executing
+    nan_rate: float = 0.0       # poison one output element with NaN
+    inf_rate: float = 0.0       # poison one output element with +Inf
+    truncate_rate: float = 0.0  # shear a leading axis off one restored leaf
+    seed: int = 0
+
+
+class FaultInjector:
+    """Wrap executor/checkpoint callables with seeded fault draws.
+
+    ``counts`` ledger: ``calls``/``restores`` are attempts seen;
+    ``latency``/``error``/``nan``/``inf``/``truncate`` are faults actually
+    injected.  ``plan`` is read per call, so a soak can switch phases by
+    assigning a new :class:`FaultPlan` mid-run — the random stream carries
+    across phases, keeping the whole run a function of the initial seed.
+    """
+
+    def __init__(self, plan: FaultPlan, *, sleep=time.sleep):
+        self.plan = plan
+        self.sleep = sleep
+        self.rng = np.random.default_rng(plan.seed)
+        self.counts = {"calls": 0, "latency": 0, "error": 0, "nan": 0,
+                       "inf": 0, "restores": 0, "truncate": 0}
+
+    # ---------------------------------------------------------- executor ---
+    def wrap_execute(self, fn):
+        """``fn(program, x, m_active=None, **kw)`` -> same signature, with
+        per-call fault draws.  Draw order is fixed (latency, error, nan,
+        inf) so counts replay for a given seed regardless of outcomes."""
+
+        def wrapped(program, x, m_active=None, **kw):
+            plan = self.plan
+            self.counts["calls"] += 1
+            u = self.rng.random(4)
+            if u[0] < plan.latency_rate:
+                self.counts["latency"] += 1
+                self.sleep(plan.latency_s)
+            if u[1] < plan.error_rate:
+                self.counts["error"] += 1
+                raise InjectedFault(
+                    f"injected executor fault (call {self.counts['calls']})")
+            out = fn(program, x, m_active, **kw)
+            if u[2] < plan.nan_rate:
+                self.counts["nan"] += 1
+                out = out.at[(0,) * out.ndim].set(float("nan"))
+            elif u[3] < plan.inf_rate:
+                self.counts["inf"] += 1
+                out = out.at[(0,) * out.ndim].set(float("inf"))
+            return out
+
+        return wrapped
+
+    # -------------------------------------------------------- checkpoint ---
+    def wrap_restore(self, fn):
+        """Wrap ``CheckpointManager.restore`` (bound or unbound): with
+        probability ``truncate_rate`` the restored tree comes back with one
+        leaf's leading axis sheared off — a torn/truncated read.  The
+        manifest ``extra`` passes through untouched."""
+        import jax
+
+        def wrapped(*args, **kw):
+            self.counts["restores"] += 1
+            restored, extra = fn(*args, **kw)
+            if self.rng.random() < self.plan.truncate_rate:
+                leaves, treedef = jax.tree_util.tree_flatten(restored)
+                idx = next((i for i, leaf in enumerate(leaves)
+                            if getattr(leaf, "ndim", 0) >= 1
+                            and leaf.shape[0] > 1), None)
+                if idx is not None:
+                    self.counts["truncate"] += 1
+                    leaves[idx] = leaves[idx][:-1]
+                    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+            return restored, extra
+
+        return wrapped
+
+
+@contextlib.contextmanager
+def inject_faults(plan: FaultPlan, *, sleep=time.sleep):
+    """Patch the module-level executor + checkpoint surfaces for the scope
+    of the block; yields the :class:`FaultInjector` for count reconciliation.
+
+    Patches ``repro.deploy.executor.execute`` (the attribute the CNN
+    service's default path resolves at call time) and
+    ``CheckpointManager.restore``.  ``repro.deploy.execute`` — the name
+    bound at import into the package namespace — intentionally stays the
+    *clean* function, so reference outputs for bit-exactness checks remain
+    computable inside the block.
+    """
+    from repro.checkpoint import manager as ckpt_manager
+    from repro.deploy import executor
+
+    inj = FaultInjector(plan, sleep=sleep)
+    real_execute = executor.execute
+    real_restore = ckpt_manager.CheckpointManager.restore
+    inj.real_execute = real_execute
+    executor.execute = inj.wrap_execute(real_execute)
+    ckpt_manager.CheckpointManager.restore = inj.wrap_restore(real_restore)
+    try:
+        yield inj
+    finally:
+        executor.execute = real_execute
+        ckpt_manager.CheckpointManager.restore = real_restore
+
+
+class ManualClock:
+    """Deterministic time source for SLO tests and the serving bench.
+
+    ``clock()`` semantics of ``time.monotonic`` with explicit advancement;
+    ``sleep`` advances instead of blocking, so it doubles as the injector's
+    and the service's sleep injectable — latency spikes and retry backoff
+    become exact, replayable quantities.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        self.now += float(dt)
+
+    def sleep(self, dt: float) -> None:
+        self.advance(dt)

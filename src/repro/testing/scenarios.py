@@ -22,6 +22,15 @@ synthetic loops:
     through ``checkpoint/manager.py``: repeated checkpointing must neither
     grow the python heap (manifest/array copies) nor the on-disk step count
     (the manager's ``keep`` GC is the gauge).
+  * ``cnn_server_scenario`` — ``serve_cnn.CNNService`` under *faulty*
+    cyclic traffic: a seeded ``testing.faults`` injector alternates clean /
+    fault-storm / clean phases (latency spikes, raised exceptions, NaN
+    outputs) on a virtual clock, so the SLO controller demonstrably walks
+    down the §IV-D ladder under pressure and back to full-M after — while
+    every completed answer is verified bit-exact against the *unfaulted*
+    ``deploy.execute`` on the same padded batch, and every injected fault
+    reconciles against the service's disposition counters (zero silently
+    swallowed).
 """
 from __future__ import annotations
 
@@ -173,6 +182,132 @@ def executor_scenario(*, archs=("cnn_a", "mobilenet"), batch: int = 2,
 
 
 # ---------------------------------------------------------------------------
+# serve_cnn.CNNService under faulty traffic
+# ---------------------------------------------------------------------------
+
+def tiny_cnn_program(*, batch: int = 4, m: int = 2, seed: int = 0):
+    """A small custom-topology program for serving tests/soaks: 3x3 SAME
+    conv (D=8, AMU pool 2) on 8x8x3 images into a flatten->10 linear head.
+    Cheap enough for thousands of interpret-mode calls, deep enough that the
+    degradation ladder has distinct front-half/global rungs."""
+    import jax
+
+    from repro import deploy
+    from repro.core.binlinear import QuantConfig
+    from repro.models.cnn import LayerSpec, spec_binarize
+
+    specs = (
+        LayerSpec("c0", "conv", kh=3, kw=3, padding="SAME", pool=2),
+        LayerSpec("fc", "linear", pre="flatten", relu=False),
+    )
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    params = {
+        "c0": {"w": jax.random.normal(k0, (3, 3, 3, 8)) / 9.0,
+               "b": None},
+        "fc": {"w": jax.random.normal(k1, (4 * 4 * 8, 10)) * 0.1,
+               "b": None},
+    }
+    params = {n: {k: v for k, v in p.items() if v is not None}
+              for n, p in params.items()}
+    qc = QuantConfig(mode="binary", M=m, K_iters=4, interpret=True)
+    packed = spec_binarize(specs, params, qc)
+    return deploy.compile(packed, specs, qc, (batch, 8, 8, 3))
+
+
+def cnn_server_scenario(*, seed: int = 0, cycle: int = 54,
+                        batch_size: int = 4, verify_every: int = 3
+                        ) -> Scenario:
+    """Faulty cyclic traffic against :class:`repro.serve_cnn.CNNService`.
+
+    Each ``cycle`` (default 54 steps — phases long enough that the full
+    recover-to-rung-0 walk lands inside the cycle's own clean tail) is
+    three equal phases on a shared
+    :class:`~repro.testing.faults.ManualClock` (1 ms virtual frame/step):
+
+      1. **clean** — zero fault rates; request latency ~0 vs the 10 ms
+         target, so the controller sits (or recovers to) rung 0 (full-M);
+      2. **storm** — the injector raises its rates: every call eats a 50 ms
+         virtual latency spike, plus seeded executor exceptions and NaN
+         outputs.  p99 blows through the target and the controller walks
+         down the ladder (the first storm visits every rung, inside the
+         soak warmup window, so the compiled-variant gauges are flat after);
+      3. **clean again** — pressure clears and the controller climbs back.
+
+    Traffic: ``batch_size`` requests per step (no backlog growth), plus a
+    request with a too-tight virtual deadline every 6th step (shed at
+    *dispatch*) and an already-expired one every 13th (shed at *admit*).
+    Every ``verify_every``-th step the completed logits are compared
+    **bit-exact** against the clean ``deploy.execute`` on the service's own
+    padded batch at the served schedule; ``progress()`` exposes the
+    verified/mismatch counters, the service's disposition stats, and the
+    injector ledger so the soak test can reconcile injected == observed.
+    """
+    from repro import deploy
+    from repro.deploy import executor
+    from repro.serve_cnn import CNNService, SLOConfig
+    from repro.testing.faults import FaultInjector, FaultPlan, ManualClock
+
+    assert cycle % 3 == 0, cycle
+    program = tiny_cnn_program(batch=batch_size, seed=seed)
+    clock = ManualClock()
+    inj = FaultInjector(FaultPlan(seed=seed), sleep=clock.sleep)
+    clean = FaultPlan(seed=seed)
+    storm = FaultPlan(latency_rate=0.9, latency_s=0.05, error_rate=0.15,
+                      nan_rate=0.10, seed=seed)
+    svc = CNNService(
+        program,
+        slo=SLOConfig(target_ms=10.0, window=16, min_samples=8,
+                      recover_at=0.6, recover_after=2),
+        batch_size=batch_size, max_queue=4 * batch_size,
+        max_retries=4, backoff_s=0.001,
+        clock=clock, sleep=clock.sleep,
+        execute_fn=inj.wrap_execute(executor.execute))
+    rng = np.random.default_rng(seed + 1)
+    counters = {"verified": 0, "mismatches": 0, "submitted": 0,
+                "done": 0, "failed": 0}
+
+    def step(i: int) -> None:
+        phase = ((i - 1) % cycle) // (cycle // 3)
+        inj.plan = storm if phase == 1 else clean
+        clock.advance(0.001)
+        for _ in range(batch_size):
+            img = rng.standard_normal(program.input_shape[1:],
+                                      dtype=np.float32)
+            svc.submit(img)
+            counters["submitted"] += 1
+        if i % 6 == 0:      # expires while queued -> shed at dispatch
+            svc.submit(np.zeros(program.input_shape[1:], np.float32),
+                       deadline_s=clock() + 5e-4)
+            counters["submitted"] += 1
+        if i % 13 == 0:     # dead on arrival -> shed at admit
+            svc.submit(np.zeros(program.input_shape[1:], np.float32),
+                       deadline_s=clock() - 1.0)
+            counters["submitted"] += 1
+        finished = svc.step()
+        done = [r for r in finished if r.status == "done"]
+        counters["done"] += len(done)
+        counters["failed"] += sum(r.status == "failed" for r in finished)
+        if done and i % verify_every == 0:
+            # clean reference on the exact padded batch + schedule served
+            ref = np.asarray(deploy.execute(
+                svc.program, svc.last_batch, svc.last_schedule))
+            for r in done:
+                counters["verified"] += 1
+                if not np.array_equal(r.logits, ref[r.batch_index]):
+                    counters["mismatches"] += 1
+
+    def progress() -> dict:
+        return {**counters, "stats": svc.stats,
+                "injected": dict(inj.counts)}
+
+    return Scenario(
+        name="cnn_server_faulty",
+        step=step,
+        gauges=svc.cache_gauges(),
+        progress=progress)
+
+
+# ---------------------------------------------------------------------------
 # checkpoint save/load cycle
 # ---------------------------------------------------------------------------
 
@@ -221,4 +356,5 @@ SCENARIOS = {
     "server": server_scenario,
     "executor": executor_scenario,
     "checkpoint": checkpoint_scenario,
+    "cnn_server": cnn_server_scenario,
 }

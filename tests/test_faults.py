@@ -1,0 +1,263 @@
+"""Fault-injection matrix: every injected fault class has a disposition.
+
+One test per fault class (ISSUE 8), each asserting (a) the service's
+disposition — retried, shed, degraded, or failed-loudly — matches the
+documented matrix in docs/serving_cnn.md, (b) the queue drains afterward
+(no fault wedges the service), and (c) the fault is *accounted*: the
+service's counters reconcile against the injector's ledger, so nothing is
+silently swallowed.  Plus the harness's own contracts: seeded determinism,
+context-manager patch/unpatch hygiene, and the checkpoint-truncation path
+through ``deploy.load_program``'s integrity gate.
+
+The ``sleep`` injectable doubles as the phase switch: the service's retry
+backoff calls it between attempts, so ``_clear_on_sleep`` flips the
+injector to a clean plan exactly at the first retry — fault on attempt 0,
+success on attempt 1, fully deterministic.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import deploy
+from repro.deploy import executor
+from repro.serve_cnn import CNNService, SLOConfig
+from repro.testing.faults import (FaultInjector, FaultPlan, InjectedFault,
+                                  ManualClock, inject_faults)
+from repro.testing.scenarios import tiny_cnn_program
+
+jax.config.update("jax_platform_name", "cpu")
+
+CLEAN = FaultPlan()
+
+
+@pytest.fixture(scope="module")
+def program():
+    return tiny_cnn_program(batch=4)
+
+
+def _service(program, inj, clock, **kw):
+    kw.setdefault("max_retries", 2)
+    kw.setdefault("backoff_s", 0.001)
+    return CNNService(program, clock=clock, sleep=clock.sleep,
+                      execute_fn=inj.wrap_execute(executor.execute), **kw)
+
+
+def _clear_on_sleep(inj, clock):
+    """sleep injectable that advances the virtual clock AND clears the
+    fault plan — the retry backoff is the first sleep, so attempt 0 faults
+    and attempt 1 runs clean."""
+    def sleep(dt):
+        clock.advance(dt)
+        inj.plan = CLEAN
+    return sleep
+
+
+def _imgs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((8, 8, 3), dtype=np.float32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the fault matrix, class by class
+# ---------------------------------------------------------------------------
+
+class TestFaultDispositions:
+    def test_executor_exception_is_retried(self, program):
+        clock = ManualClock()
+        inj = FaultInjector(FaultPlan(error_rate=1.0))
+        svc = _service(program, inj, clock)
+        inj.sleep = clock.sleep
+        svc.sleep = _clear_on_sleep(inj, clock)
+        reqs = [svc.submit(im) for im in _imgs(2)]
+        done = svc.drain()
+        # disposition: retried once, then served — and bit-exact
+        assert [r.status for r in done] == ["done"] * 2
+        s = svc.stats
+        assert s["retries"] == 1 and s["exec_exceptions"] == 1, s
+        assert s["fault_types"] == {"InjectedFault": 1}, s
+        assert s["exec_exceptions"] == inj.counts["error"]  # reconciled
+        ref = np.asarray(deploy.execute(program, svc.last_batch,
+                                        svc.last_schedule))
+        assert np.array_equal(done[0].logits, ref[0])
+        assert not svc.queue
+
+    @pytest.mark.parametrize("field", ["nan_rate", "inf_rate"])
+    def test_nonfinite_output_is_screened_and_retried(self, program, field):
+        """NaN/Inf logits must never reach a client: the finite screen
+        raises, the batch retries clean, and the detection is counted."""
+        clock = ManualClock()
+        inj = FaultInjector(FaultPlan(**{field: 1.0}))
+        svc = _service(program, inj, clock)
+        svc.sleep = _clear_on_sleep(inj, clock)
+        svc.submit(_imgs(1)[0])
+        (req,) = svc.drain()
+        assert req.status == "done"
+        assert np.all(np.isfinite(req.logits))
+        s = svc.stats
+        assert s["nonfinite_detected"] == 1 and s["retries"] == 1, s
+        assert s["exec_exceptions"] == 0, s     # screened, not an exec raise
+        injected = inj.counts["nan"] + inj.counts["inf"]
+        assert s["nonfinite_detected"] == injected  # reconciled
+        ref = np.asarray(deploy.execute(program, svc.last_batch,
+                                        svc.last_schedule))
+        assert np.array_equal(req.logits, ref[0])
+
+    def test_latency_spike_degrades_the_ladder(self, program):
+        """Latency faults don't raise — their disposition is *degradation*:
+        the SLO controller sees the spiked completions and walks down the
+        ladder, and climbs back once the spikes stop."""
+        clock = ManualClock()
+        inj = FaultInjector(
+            FaultPlan(latency_rate=1.0, latency_s=0.05), sleep=clock.sleep)
+        svc = _service(
+            program, inj, clock,
+            slo=SLOConfig(target_ms=10.0, window=16, min_samples=4,
+                          recover_at=0.5, recover_after=2))
+        for i in range(4):                      # spiked traffic
+            for im in _imgs(4, seed=i):
+                svc.submit(im)
+            svc.step()
+        assert svc.controller.rung > 0, svc.stats   # degraded
+        inj.plan = CLEAN
+        for i in range(10):                     # pressure cleared
+            for im in _imgs(4, seed=10 + i):
+                svc.submit(im)
+            svc.step()
+        assert svc.controller.rung == 0, svc.stats  # recovered to full-M
+        s = svc.stats
+        assert inj.counts["latency"] > 0
+        assert len(s["rung_hist"]) > 1, s           # histogram shows both
+        assert s["completed"] == s["admitted"], s   # degraded, shed nothing
+
+    def test_exhausted_retries_fail_loudly_and_queue_drains(self, program):
+        """A persistent fault must not wedge the queue OR produce a silent
+        answer: after max_retries the batch's requests come back
+        status=failed with the error attached, and later clean traffic is
+        served normally."""
+        clock = ManualClock()
+        inj = FaultInjector(FaultPlan(error_rate=1.0))
+        svc = _service(program, inj, clock, max_retries=2)
+        svc.submit(_imgs(1)[0])
+        (req,) = svc.step()
+        assert req.status == "failed"
+        assert req.logits is None
+        assert "InjectedFault" in req.error
+        s = svc.stats
+        assert s["exec_failed_batches"] == 1, s
+        assert s["retries"] == 2, s                  # bounded, not infinite
+        assert s["exec_exceptions"] == inj.counts["error"] == 3, s
+        inj.plan = CLEAN                             # fault clears ->
+        after = svc.submit(_imgs(1, seed=9)[0])      # service recovers
+        assert svc.drain() and after.status == "done"
+        assert not svc.queue
+
+    def test_truncated_checkpoint_fails_integrity_gate(self, program,
+                                                       tmp_path):
+        """A torn checkpoint read (one leaf loses a leading-axis slice —
+        here a whole binary level) must fail at load_program with a typed
+        error naming the findings, not as garbage logits later.  The fuzz
+        tier's opt-out returns the corrupt program unverified."""
+        from repro.checkpoint.manager import CheckpointManager
+
+        mgr = CheckpointManager(str(tmp_path / "ckpt"))
+        deploy.save_program(mgr, 1, program)
+        with inject_faults(FaultPlan(truncate_rate=1.0)) as inj:
+            with pytest.raises(deploy.ProgramIntegrityError) as ei:
+                deploy.load_program(mgr, 1, program)
+            assert inj.counts["truncate"] == 1
+            assert ei.value.findings          # carries the ERROR findings
+            corrupt = deploy.load_program(mgr, 1, program, verify=False)
+        # opt-out really skipped the gate: the damage is present
+        assert (corrupt.instrs[0].B_tap_packed.shape
+                != program.instrs[0].B_tap_packed.shape)
+        # clean restore passes the gate
+        back = deploy.load_program(mgr, 1, program)
+        np.testing.assert_array_equal(back.instrs[0].B_tap_packed,
+                                      program.instrs[0].B_tap_packed)
+
+
+# ---------------------------------------------------------------------------
+# harness contracts
+# ---------------------------------------------------------------------------
+
+class TestHarness:
+    def test_inject_faults_patches_and_restores(self, program):
+        """The context manager patches the executor module attribute (the
+        service's default late-bound path) and restores it on exit even
+        when the body raises; deploy.execute stays the clean reference."""
+        from repro.checkpoint.manager import CheckpointManager
+
+        real_exec = executor.execute
+        real_restore = CheckpointManager.restore
+        x = np.stack(_imgs(4))
+        with inject_faults(FaultPlan(error_rate=1.0)) as inj:
+            assert executor.execute is not real_exec
+            with pytest.raises(InjectedFault):
+                executor.execute(program, x)
+            # the package-level binding is untouched: reference outputs
+            # stay computable inside the block
+            ref = deploy.execute(program, x)
+            assert np.all(np.isfinite(np.asarray(ref)))
+        assert executor.execute is real_exec
+        assert CheckpointManager.restore is real_restore
+        assert inj.counts["error"] == 1
+        with pytest.raises(RuntimeError, match="boom"):
+            with inject_faults(FaultPlan()):
+                raise RuntimeError("boom")
+        assert executor.execute is real_exec       # finally ran
+
+    def test_service_default_path_sees_global_patch(self, program):
+        """A CNNService built with NO execute_fn still gets faults from
+        inject_faults — the default path resolves executor.execute at call
+        time, by design."""
+        clock = ManualClock()
+        svc = CNNService(program, clock=clock, sleep=clock.sleep,
+                         max_retries=3, backoff_s=0.001)
+        with inject_faults(FaultPlan(error_rate=0.5, seed=3)) as inj:
+            for im in _imgs(8):
+                svc.submit(im)
+            svc.drain()
+        assert inj.counts["error"] > 0
+        assert svc.stats["exec_exceptions"] == inj.counts["error"]
+
+    def test_seeded_determinism(self, program):
+        x = np.stack(_imgs(4))
+        ledgers = []
+        for _ in range(2):
+            inj = FaultInjector(FaultPlan(error_rate=0.4, nan_rate=0.4,
+                                          seed=7), sleep=lambda s: None)
+            fn = inj.wrap_execute(executor.execute)
+            for _call in range(12):
+                try:
+                    fn(program, x)
+                except InjectedFault:
+                    pass
+            ledgers.append(dict(inj.counts))
+        assert ledgers[0] == ledgers[1]
+        assert ledgers[0]["error"] > 0 and ledgers[0]["nan"] > 0
+
+    def test_manual_clock(self):
+        clock = ManualClock(5.0)
+        assert clock() == 5.0
+        clock.sleep(0.25)
+        clock.advance(0.75)
+        assert clock() == 6.0
+
+    def test_zero_rate_plan_is_transparent(self, program):
+        inj = FaultInjector(FaultPlan())
+        fn = inj.wrap_execute(executor.execute)
+        x = np.stack(_imgs(4))
+        out = np.asarray(fn(program, x))
+        ref = np.asarray(deploy.execute(program, x))
+        np.testing.assert_array_equal(out, ref)
+        assert inj.counts["calls"] == 1
+        assert sum(v for k, v in inj.counts.items()
+                   if k not in ("calls", "restores")) == 0
+
+    def test_plan_fields_cover_the_matrix(self):
+        names = {f.name for f in dataclasses.fields(FaultPlan)}
+        assert {"latency_rate", "error_rate", "nan_rate", "inf_rate",
+                "truncate_rate", "seed"} <= names

@@ -46,6 +46,48 @@ def test_executor_soak_rotating_schedules():
     result.assert_flat()
 
 
+def test_cnn_server_soak_faulty_traffic():
+    """Acceptance soak for the SLO-governed CNN service (ISSUE 8): under
+    cyclic fault storms (latency spikes + executor exceptions + NaN outputs
+    at seeded rates) every non-shed request finishes bit-exact vs the clean
+    ``deploy.execute``, every injected fault reconciles against a disposition
+    counter (zero silently swallowed), the degradation histogram shows
+    reduced-M activity during pressure and full-M recovery after, and the
+    trend gauges stay flat."""
+    scen = sc.cnn_server_scenario()
+    # 324 steps = 6 whole 54-step clean/storm/clean cycles; whole cycles
+    # keep the (deliberately spiky) latency series trend-free
+    result = run_soak(scen.step, steps=324, name=scen.name,
+                      gauges=scen.gauges)
+    p = scen.progress()
+    stats = p["stats"]
+    # --- every completed answer verified bit-exact vs deploy.execute ---
+    assert p["verified"] > 100, p
+    assert p["mismatches"] == 0, p
+    # --- zero faults silently swallowed: injected == observed, per class
+    inj = p["injected"]
+    assert stats["exec_exceptions"] == inj["error"], (stats, inj)
+    assert stats["nonfinite_detected"] == inj["nan"] + inj["inf"], (
+        stats, inj)
+    assert inj["error"] > 0 and inj["nan"] > 0 and inj["latency"] > 0, inj
+    # every observed fault was retried; with the seeded rates and
+    # max_retries=4 no batch exhausts its retries, so nothing failed
+    assert stats["retries"] > 0, stats
+    assert stats["exec_failed_batches"] == 0 and p["failed"] == 0, (stats, p)
+    # --- degradation histogram: reduced-M during storms, back to full-M
+    hist = stats["rung_hist"]
+    assert hist.get(0, 0) > 0 and sum(
+        v for k, v in hist.items() if k > 0) > 0, hist
+    assert stats["rung"] == 0 and not stats["shedding"], stats  # recovered
+    # --- explicit sheds, drained queue, nothing stuck ---
+    assert stats["shed"]["deadline_expired"] > 0, stats
+    assert stats["shed"]["slo_shed"] > 0, stats
+    assert stats["queue_depth"] <= 2 * 4, stats
+    # --- flat trends; gauges exactly flat (all rungs traced in cycle 1,
+    # inside the 20% warmup window) ---
+    result.assert_flat()
+
+
 def test_checkpoint_soak_save_load_cycle(tmp_path):
     scen = sc.checkpoint_scenario(str(tmp_path / "ckpt"))
     result = run_soak(scen.step, steps=120, name=scen.name,

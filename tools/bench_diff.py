@@ -49,6 +49,13 @@ METRIC_DIRECTIONS = {
     "weight_bytes": "lower",
     # serve structured rows
     "device_calls_per_admit": "lower",
+    # cnn_slo rows (virtual-clock policy outputs, benchmarks/serve_bench):
+    # a controller/ladder change that lifts tail latency, sheds more, or
+    # completes fewer requests at the same offered load is a regression
+    "p50_virtual_ms": "lower",
+    "p99_virtual_ms": "lower",
+    "shed_fraction": "lower",
+    "completed": "higher",
     # program totals
     "max_vmem_bytes": "lower",
     # verify summaries

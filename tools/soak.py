@@ -37,7 +37,10 @@ for _p in (str(_ROOT / "src"), str(_ROOT)):
 # CPU interpret mode while still clearing the acceptance floors
 # (>= 2000 server decode steps, >= 500 executor calls).  One server soak
 # step admits/retires a whole request group, so 1100 steps ~= 2200 decodes.
-DEFAULT_STEPS = {"server": 1100, "executor": 260, "checkpoint": 120}
+# cnn_server runs whole 54-step fault cycles (clean/storm/clean) so the
+# latency trend sees complete cycles, not a half-storm tail.
+DEFAULT_STEPS = {"server": 1100, "executor": 260, "checkpoint": 120,
+                 "cnn_server": 324}
 
 
 def main(argv=None) -> int:

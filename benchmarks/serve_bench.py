@@ -16,6 +16,12 @@ deterministic function of the policy — machine-independent, which is what
 lets ``tools/bench_diff.py`` gate on them: a controller change that raises
 p99 under overload, sheds more, or completes less is a policy regression
 CI catches.
+
+**CNN recovery** — watchdog self-test cadence and hot-reload latency after
+a seeded in-memory bit flip (docs/checkpointing.md).  Same virtual-clock
+determinism: detect latency in batches/virtual ms, BIST runs per 100
+batches, and a bit-exactness flag on the recovered program are gated by
+bench_diff so the recovery path cannot silently slow down or stop working.
 """
 from __future__ import annotations
 
@@ -125,6 +131,105 @@ def _cnn_slo_rows():
     return rows, structured
 
 
+_CNN_SELFTEST_EVERY = 3
+
+
+def _cnn_recovery_rows():
+    """CNN recovery bench: golden self-test cadence + hot-reload latency.
+
+    Seeds one in-memory bit flip into the live program's packed weights and
+    measures the watchdog's response on the virtual clock: how many batches
+    (and virtual ms) pass before the flip is detected and the service has
+    hot-reloaded from the checkpoint, how often the BIST runs per 100
+    batches, and whether the recovered program is bit-exact against the
+    pre-fault reference.  ManualClock + seeded injector + cost-model
+    executor — the self-test itself runs the real (clean) execute path, so
+    the numbers are a pure function of the watchdog policy and bench_diff
+    can gate on them: a watchdog change that detects later, self-tests
+    more per batch, or recovers inexactly is a regression CI catches."""
+    import dataclasses
+    import tempfile
+
+    from repro import deploy
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.serve_cnn import CNNService, SLOConfig, schedule_cost
+    from repro.testing.faults import FaultInjector, FaultPlan, ManualClock
+    from repro.testing.scenarios import tiny_cnn_program
+
+    program = tiny_cnn_program(batch=4)
+    full_cost = schedule_cost(program, None)
+    img = np.zeros(tuple(program.input_shape[1:]), np.float32)
+    x_ref = np.zeros(tuple(program.input_shape), np.float32)
+    ref = np.asarray(deploy.execute(program, x_ref))
+    out_tail = ref.shape[1:]
+
+    mgr = CheckpointManager(tempfile.mkdtemp(prefix="bench_ckpt_"), keep=2)
+    deploy.save_program(mgr, 0, program)
+    clock = ManualClock()
+
+    def execute_fn(prog, x, m_active=None, *, interpret=None):
+        cost = schedule_cost(prog, m_active)
+        clock.advance(_CNN_EXEC_FULL_S * cost / full_cost)
+        return np.zeros((x.shape[0],) + out_tail, np.float32)
+
+    svc = CNNService(
+        program,
+        slo=SLOConfig(target_ms=_CNN_TARGET_MS, window=16,
+                      min_samples=4, recover_after=2),
+        batch_size=4, max_queue=16,
+        clock=clock, sleep=clock.sleep, execute_fn=execute_fn,
+        selftest_every=_CNN_SELFTEST_EVERY,
+        checkpoint_manager=mgr,
+        restore_like=dataclasses.replace(program, golden=None))
+
+    def step_once():
+        clock.advance(_CNN_FRAME_S)
+        for _ in range(2):
+            svc.submit(img)
+        svc.step()
+
+    warm_steps = 12
+    for _ in range(warm_steps):
+        step_once()
+    assert svc.stats["reloads"] == 0 and svc.stats["selftest_failures"] == 0
+
+    inj = FaultInjector(FaultPlan(seed=5), sleep=clock.sleep)
+    svc.program = inj.flip_bit_in_program(svc.program)
+    flip_batch, flip_t = svc.stats["batches"], clock()
+    for _ in range(2 * _CNN_SELFTEST_EVERY + 2):
+        if svc.stats["reloads"]:
+            break
+        step_once()
+    assert svc.stats["reloads"] == 1, "watchdog never detected the flip"
+    detect_batches = svc.stats["batches"] - flip_batch
+    detect_virtual_ms = round((clock() - flip_t) * 1e3, 3)
+
+    for _ in range(warm_steps):  # post-recovery steady state
+        step_once()
+    svc.drain()
+    s = svc.stats
+    recovered = np.asarray(deploy.execute(svc.program, x_ref))
+    bit_exact = int(np.array_equal(recovered, ref))
+    per_100 = round(100.0 * s["selftest_runs"] / max(s["batches"], 1), 3)
+    rows = [(
+        "serve_cnn_recovery", detect_virtual_ms / 1e3,
+        f"detect={detect_batches}batches selftest/100batches={per_100} "
+        f"reloads={s['reloads']} bit_exact={bit_exact}",
+    )]
+    structured = [{
+        "name": "serve_cnn_recovery", "kind": "cnn_recovery",
+        "selftest_every": _CNN_SELFTEST_EVERY,
+        "selftest_per_100_batches": per_100,
+        "reload_detect_batches": detect_batches,
+        "reload_detect_virtual_ms": detect_virtual_ms,
+        "reloads": s["reloads"],
+        "selftest_failures": s["selftest_failures"],
+        "recovered_bit_exact": bit_exact,
+        "completed": s["completed"],
+    }]
+    return rows, structured
+
+
 def _bench(quick: bool):
     """Shared body for ``run``/``run_structured`` — cached per quick flag so
     the driver's CSV + JSON passes dispatch the admissions only once."""
@@ -160,6 +265,11 @@ def _bench(quick: bool):
     cnn_rows, cnn_structured = _cnn_slo_rows()
     rows.extend(cnn_rows)
     structured.extend(cnn_structured)
+    # CNN recovery section: watchdog detect latency + BIST cadence, same
+    # virtual-clock determinism (its secs column is virtual detect latency)
+    rec_rows, rec_structured = _cnn_recovery_rows()
+    rows.extend(rec_rows)
+    structured.extend(rec_structured)
     _CACHE[quick] = (rows, structured)
     return _CACHE[quick]
 

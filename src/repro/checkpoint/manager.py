@@ -1,12 +1,27 @@
-"""Fault-tolerant checkpointing: sharded npz + manifest, atomic, reshardable.
+"""Fault-tolerant checkpointing: sharded npz + manifest, atomic, verified.
 
 Design (for 1000+ node deployments, exercised here on 1 host):
   * Each host writes only the leaves (or leaf-shards) it owns to
     ``step_<N>/host_<id>.npz``; a JSON manifest records the tree structure,
-    dtypes, global shapes and data-pipeline state.
-  * Writes are atomic: temp dir -> fsync -> rename; a crashed write can
-    never corrupt the latest checkpoint (rename is the commit point).
-  * ``latest_step`` scans for complete checkpoints only (manifest present).
+    dtypes, global shapes, per-leaf CRC32 content digests, a whole-manifest
+    digest, and data-pipeline state.
+  * Writes are atomic AND overwrite-safe: temp dir -> fsync -> rename-aside
+    the old step -> rename the new dir in (the commit point) -> delete the
+    displaced copy.  A crash at any instant leaves either the old or the new
+    step intact; ``__init__`` scrubs the two orphan classes a crash can
+    leave behind (``.tmp_ckpt_*`` pre-commit temps, ``.displaced_step_*``
+    set-aside copies).
+  * Restore VERIFIES: every leaf is re-hashed against the manifest digest
+    (``ChecksumMismatch`` names the leaf, both digests, and the step), the
+    manifest is re-hashed against its own recorded digest
+    (``ManifestMismatch``), and loaded shape/dtype must match both the
+    manifest and the restore target (``LeafMismatch`` — no silent
+    ``astype``; pass ``allow_cast=True`` for an explicit conversion).
+  * ``restore_latest_good`` walks steps newest-first, QUARANTINES failing
+    steps (renamed to ``quarantine_step_<N>/`` with a JSON reason ledger,
+    never deleted) and returns the first step that passes every check plus
+    the caller's ``validate`` hook; ``NoGoodCheckpoint`` when the walk
+    exhausts.
   * Restore is RESHARD-SAFE: arrays are loaded as full values and committed
     to whatever sharding the restoring job requests (jax.device_put with the
     new sharding), so a job restarted on a different mesh/device count
@@ -14,14 +29,72 @@ Design (for 1000+ node deployments, exercised here on 1 host):
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
 import tempfile
+import zipfile
+import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_TMP_PREFIX = ".tmp_ckpt_"
+_DISPLACED_PREFIX = ".displaced_"
+_QUARANTINE_PREFIX = "quarantine_"
+
+
+def crc32_hex(data: bytes) -> str:
+    """CRC32 of ``data`` as a fixed-width lowercase hex string."""
+    return f"{zlib.crc32(data) & 0xFFFFFFFF:08x}"
+
+
+def _manifest_digest(meta: dict) -> str:
+    doc = {k: v for k, v in meta.items() if k != "manifest_crc32"}
+    return crc32_hex(json.dumps(doc, sort_keys=True).encode())
+
+
+class CheckpointCorruption(RuntimeError):
+    """A checkpoint step cannot be trusted (digest, structure, or IO)."""
+
+    def __init__(self, message: str, *, step: int | None = None):
+        super().__init__(message)
+        self.step = step
+
+
+class ChecksumMismatch(CheckpointCorruption):
+    """A leaf's bytes no longer hash to the digest recorded at save time."""
+
+    def __init__(self, message: str, *, step: int | None, leaf: str,
+                 expected: str, actual: str):
+        super().__init__(message, step=step)
+        self.leaf = leaf
+        self.expected = expected
+        self.actual = actual
+
+
+class ManifestMismatch(CheckpointCorruption):
+    """The manifest itself no longer hashes to its recorded digest."""
+
+    def __init__(self, message: str, *, step: int | None, expected: str,
+                 actual: str):
+        super().__init__(message, step=step)
+        self.expected = expected
+        self.actual = actual
+
+
+class LeafMismatch(CheckpointCorruption):
+    """Loaded leaf shape/dtype disagrees with the manifest or the target."""
+
+    def __init__(self, message: str, *, step: int | None, leaf: str):
+        super().__init__(message, step=step)
+        self.leaf = leaf
+
+
+class NoGoodCheckpoint(RuntimeError):
+    """``restore_latest_good`` exhausted every step without success."""
 
 
 def _flatten_with_paths(tree):
@@ -39,49 +112,108 @@ def _flatten_with_paths(tree):
 
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3, host_id: int = 0,
-                 n_hosts: int = 1):
+                 n_hosts: int = 1, scrub: bool = True):
         self.dir = directory
         self.keep = keep
         self.host_id = host_id
         self.n_hosts = n_hosts
+        #: (step, reason) for every step this manager quarantined.
+        self.quarantined: list[tuple[int, str]] = []
         os.makedirs(directory, exist_ok=True)
+        if scrub:
+            self._scrub_orphans()
+
+    def _scrub_orphans(self):
+        """Clean up after crashed saves (see the commit protocol in save).
+
+        ``.tmp_ckpt_*``: a save died before its commit rename — nothing was
+        displaced, so the temp is garbage.  ``.displaced_step_*``: a save
+        died *between* renaming the old step aside and committing the new
+        one — the displaced dir holds the last intact copy of that step, so
+        it is restored unless the commit actually landed.
+        """
+        for d in sorted(os.listdir(self.dir)):
+            path = os.path.join(self.dir, d)
+            if d.startswith(_TMP_PREFIX):
+                shutil.rmtree(path, ignore_errors=True)
+            elif d.startswith(_DISPLACED_PREFIX):
+                orig = d[len(_DISPLACED_PREFIX):].rsplit("_", 1)[0]
+                dest = os.path.join(self.dir, orig)
+                if os.path.exists(os.path.join(dest, "manifest.json")):
+                    shutil.rmtree(path, ignore_errors=True)  # commit landed
+                else:
+                    shutil.rmtree(dest, ignore_errors=True)  # partial commit
+                    os.rename(path, dest)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
 
     # ------------------------------------------------------------- save ---
     def save(self, step: int, state: dict, *, extra: dict | None = None):
         """state: pytree of arrays.  extra: JSON-able (data pipeline etc.)."""
         flat, _ = _flatten_with_paths(state)
-        step_dir = os.path.join(self.dir, f"step_{step:010d}")
-        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_ckpt_")
+        step_dir = self._step_dir(step)
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=_TMP_PREFIX)
+        displaced = None
         try:
             arrays = {}
             meta = {"step": step, "extra": extra or {}, "leaves": {}}
             for key, leaf in flat.items():
-                arr = np.asarray(jax.device_get(leaf))
+                host = np.asarray(jax.device_get(leaf))
+                # ascontiguousarray promotes 0-d to (1,); keep scalar shapes
+                arr = np.ascontiguousarray(host).reshape(host.shape)
                 arrays[key.replace("/", "__")] = arr
                 meta["leaves"][key] = {
-                    "shape": list(arr.shape), "dtype": str(arr.dtype)}
+                    "shape": list(arr.shape), "dtype": str(arr.dtype),
+                    "crc32": crc32_hex(arr.tobytes())}
+            meta["manifest_crc32"] = _manifest_digest(meta)
             np.savez(os.path.join(tmp, f"host_{self.host_id}.npz"), **arrays)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(meta, f)
                 f.flush()
                 os.fsync(f.fileno())
+            # Overwrite protocol: the old step is renamed aside (intact)
+            # before the new dir is committed, so a crash between the two
+            # renames loses nothing — __init__ recovers the displaced copy.
             if os.path.exists(step_dir):
-                shutil.rmtree(step_dir)
-            os.rename(tmp, step_dir)  # commit point
+                displaced = self._displaced_name(step_dir)
+                os.rename(step_dir, displaced)
+            self._commit(tmp, step_dir)  # commit point
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
+            if displaced is not None and not os.path.exists(step_dir):
+                with contextlib.suppress(OSError):
+                    os.rename(displaced, step_dir)  # roll the old step back
+                displaced = None
             raise
+        if displaced is not None:
+            shutil.rmtree(displaced, ignore_errors=True)
         self._gc()
         return step_dir
+
+    def _displaced_name(self, step_dir: str) -> str:
+        base = os.path.basename(step_dir)
+        i = 0
+        while True:
+            cand = os.path.join(
+                self.dir, f"{_DISPLACED_PREFIX}{base}_{i}")
+            if not os.path.exists(cand):
+                return cand
+            i += 1
+
+    def _commit(self, tmp: str, step_dir: str) -> None:
+        """The commit rename, isolated so crash tests can fail it."""
+        os.rename(tmp, step_dir)
 
     def _gc(self):
         steps = self.all_steps()
         for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
-                          ignore_errors=True)
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # ---------------------------------------------------------- restore ---
     def all_steps(self) -> list[int]:
+        """Committed steps, ascending.  Quarantined dirs are skipped (their
+        names start with ``quarantine_``, not ``step_``)."""
         out = []
         for d in os.listdir(self.dir):
             if d.startswith("step_") and os.path.exists(
@@ -93,25 +225,181 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, target: dict, *, shardings=None):
+    def _read_step(self, step: int, *, verify: bool = True):
+        """Load manifest + arrays for ``step``, verifying digests/shapes.
+
+        Raises a typed ``CheckpointCorruption`` subclass on the first
+        problem found; manifests written before digests existed (no
+        ``crc32``/``manifest_crc32`` fields) are tolerated.
+        """
+        step_dir = self._step_dir(step)
+        manifest = os.path.join(step_dir, "manifest.json")
+        if not os.path.exists(manifest):
+            raise CheckpointCorruption(
+                f"step {step}: manifest.json missing under {step_dir}",
+                step=step)
+        try:
+            with open(manifest) as f:
+                meta = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruption(
+                f"step {step}: unreadable manifest.json: {e}",
+                step=step) from e
+        npz = os.path.join(step_dir, f"host_{self.host_id}.npz")
+        if not os.path.exists(npz):
+            raise CheckpointCorruption(
+                f"step {step}: host_{self.host_id}.npz missing under "
+                f"{step_dir}", step=step)
+        try:
+            with np.load(npz) as z:
+                data = {k: z[k] for k in z.files}
+        except (OSError, ValueError, zipfile.BadZipFile) as e:
+            raise CheckpointCorruption(
+                f"step {step}: unreadable host_{self.host_id}.npz: {e}",
+                step=step) from e
+        if not verify:
+            return meta, data
+        recorded = meta.get("manifest_crc32")
+        if recorded is not None:
+            actual = _manifest_digest(meta)
+            if actual != recorded:
+                raise ManifestMismatch(
+                    f"step {step}: manifest digest {actual} != recorded "
+                    f"{recorded} (manifest tampered or torn)",
+                    step=step, expected=recorded, actual=actual)
+        for key, info in meta.get("leaves", {}).items():
+            nkey = key.replace("/", "__")
+            if nkey not in data:
+                raise CheckpointCorruption(
+                    f"step {step}: leaf {key!r} recorded in manifest but "
+                    f"absent from npz", step=step)
+            arr = data[nkey]
+            if list(arr.shape) != list(info["shape"]) or \
+                    str(arr.dtype) != info["dtype"]:
+                raise LeafMismatch(
+                    f"step {step}: leaf {key!r} loaded as "
+                    f"{arr.dtype}{tuple(arr.shape)} but manifest records "
+                    f"{info['dtype']}{tuple(info['shape'])}",
+                    step=step, leaf=key)
+            want = info.get("crc32")
+            if want is not None:
+                got = crc32_hex(np.ascontiguousarray(arr).tobytes())
+                if got != want:
+                    raise ChecksumMismatch(
+                        f"step {step}: leaf {key!r} digest {got} != "
+                        f"recorded {want} (bit rot or torn write)",
+                        step=step, leaf=key, expected=want, actual=got)
+        return meta, data
+
+    def verify_step(self, step: int) -> list[str]:
+        """Digest-check one step; [] when clean, else the problems found."""
+        try:
+            self._read_step(step, verify=True)
+        except CheckpointCorruption as e:
+            return [str(e)]
+        return []
+
+    def restore(self, step: int, target: dict, *, shardings=None,
+                allow_cast: bool = False, verify: bool = True):
         """target: pytree of like-structured arrays/ShapeDtypeStructs.
         shardings: optional matching pytree of jax.sharding.Sharding — arrays
-        are placed onto it (reshard-on-restore for elastic scaling)."""
-        step_dir = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(step_dir, "manifest.json")) as f:
-            meta = json.load(f)
-        data = np.load(os.path.join(step_dir, f"host_{self.host_id}.npz"))
+        are placed onto it (reshard-on-restore for elastic scaling).
+
+        Every leaf is digest-verified against the manifest, and its loaded
+        shape/dtype must match the target exactly; a dtype difference raises
+        ``LeafMismatch`` unless ``allow_cast=True`` makes the conversion
+        explicit.  Shape differences always raise.
+        """
+        meta, data = self._read_step(step, verify=verify)
         flat_t, treedef = _flatten_with_paths(target)
         flat_s, _ = (_flatten_with_paths(shardings) if shardings is not None
                      else (None, None))
         out = {}
         for key, tgt in flat_t.items():
-            arr = data[key.replace("/", "__")]
-            want_dtype = tgt.dtype
-            val = jnp.asarray(arr.astype(want_dtype))
+            nkey = key.replace("/", "__")
+            if nkey not in data:
+                raise CheckpointCorruption(
+                    f"step {step}: target leaf {key!r} absent from "
+                    f"checkpoint", step=step)
+            arr = data[nkey]
+            want_dtype = np.dtype(tgt.dtype)
+            if tuple(arr.shape) != tuple(np.shape(tgt)):
+                raise LeafMismatch(
+                    f"step {step}: leaf {key!r} has shape "
+                    f"{tuple(arr.shape)} but target expects "
+                    f"{tuple(np.shape(tgt))}", step=step, leaf=key)
+            if arr.dtype != want_dtype:
+                if not allow_cast:
+                    raise LeafMismatch(
+                        f"step {step}: leaf {key!r} stored as {arr.dtype} "
+                        f"but target expects {want_dtype} (pass "
+                        f"allow_cast=True for an explicit conversion)",
+                        step=step, leaf=key)
+                arr = arr.astype(want_dtype)
+            val = jnp.asarray(arr)
             if flat_s is not None and key in flat_s and flat_s[key] is not None:
                 val = jax.device_put(val, flat_s[key])
             out[key] = val
         leaves = [out[k] for k in flat_t.keys()]
         restored = jax.tree_util.tree_unflatten(treedef, leaves)
         return restored, meta["extra"]
+
+    # ------------------------------------------------- last-known-good ---
+    def quarantine_step(self, step: int, *, reason: str = "") -> str:
+        """Rename a bad step aside (never deleted) with a reason ledger."""
+        name = f"step_{step:010d}"
+        src = os.path.join(self.dir, name)
+        i = 0
+        while True:
+            suffix = f"_{i}" if i else ""
+            dst = os.path.join(
+                self.dir, f"{_QUARANTINE_PREFIX}{name}{suffix}")
+            if not os.path.exists(dst):
+                break
+            i += 1
+        os.rename(src, dst)
+        with open(os.path.join(dst, "quarantine.json"), "w") as f:
+            json.dump({"step": step, "reason": reason, "from": name}, f,
+                      indent=1)
+        self.quarantined.append((step, reason))
+        return dst
+
+    def quarantine_dirs(self) -> list[str]:
+        return sorted(d for d in os.listdir(self.dir)
+                      if d.startswith(_QUARANTINE_PREFIX))
+
+    def restore_latest_good(self, target, *, shardings=None,
+                            allow_cast: bool = False, validate=None):
+        """Walk steps newest-first to the first one that restores cleanly.
+
+        A step fails the walk when digest/shape/dtype verification raises
+        ``CheckpointCorruption``, or when the optional ``validate(restored,
+        extra)`` hook raises anything — either way the step is quarantined
+        (renamed aside with its reason, never deleted) and the walk
+        continues.  Returns ``(step, restored, extra)``; raises
+        ``NoGoodCheckpoint`` listing every rejection when no step survives.
+        """
+        steps = self.all_steps()
+        if not steps:
+            raise NoGoodCheckpoint(f"no checkpoints under {self.dir}")
+        rejected = []
+        for step in reversed(steps):
+            try:
+                restored, extra = self.restore(
+                    step, target, shardings=shardings, allow_cast=allow_cast)
+                if validate is not None:
+                    validate(restored, extra)
+            except CheckpointCorruption as e:
+                rejected.append((step, str(e)))
+                self.quarantine_step(step, reason=str(e))
+                continue
+            except Exception as e:  # noqa: BLE001 — validate() rejections
+                reason = f"{type(e).__name__}: {e}"
+                rejected.append((step, reason))
+                self.quarantine_step(step, reason=reason)
+                continue
+            return step, restored, extra
+        detail = "; ".join(f"step {s}: {r}" for s, r in rejected)
+        raise NoGoodCheckpoint(
+            f"all {len(rejected)} checkpoint step(s) under {self.dir} "
+            f"failed verification — {detail}")

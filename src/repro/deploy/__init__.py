@@ -6,17 +6,25 @@
     logits = deploy.execute(program, x)                  # all packed levels
     logits = deploy.execute(program, x, m_active=1)      # §IV-D global switch
     logits = deploy.execute(program, x, m_active=[1, 2, 2, 2, 2])  # per-layer
+    deploy.self_test(program)                            # golden BIST replay
 
-See docs/deploy.md for the compile → inspect → execute lifecycle.
+See docs/deploy.md for the compile → inspect → execute lifecycle and
+docs/checkpointing.md for the integrity / recovery story.
 """
 from repro.deploy.compiler import (ProgramIntegrityError, abstract_program,
-                                   compile, load_program, save_program)
+                                   compile, load_latest_good, load_program,
+                                   save_program)
 from repro.deploy.executor import execute
 from repro.deploy.program import (BinArrayProgram, ConvInstr, DWConvInstr,
-                                  LayerStats, LinearInstr, TilePlan)
+                                  GoldenRecord, LayerStats, LinearInstr,
+                                  TilePlan)
+from repro.deploy.selftest import (SelfTestFailure, compute_golden,
+                                   golden_rungs, self_test)
 
 __all__ = [
-    "BinArrayProgram", "ConvInstr", "DWConvInstr", "LinearInstr",
-    "LayerStats", "ProgramIntegrityError", "TilePlan", "abstract_program",
-    "compile", "execute", "load_program", "save_program",
+    "BinArrayProgram", "ConvInstr", "DWConvInstr", "GoldenRecord",
+    "LinearInstr", "LayerStats", "ProgramIntegrityError", "SelfTestFailure",
+    "TilePlan", "abstract_program", "compile", "compute_golden", "execute",
+    "golden_rungs", "load_latest_good", "load_program", "save_program",
+    "self_test",
 ]

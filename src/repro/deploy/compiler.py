@@ -24,6 +24,8 @@ stats — with ShapeDtypeStruct weights, for free.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -31,7 +33,8 @@ from repro.core import binconv
 from repro.core import binlinear as bl
 from repro.core.binlinear import QuantConfig
 from repro.deploy.program import (BinArrayProgram, ConvInstr, DWConvInstr,
-                                  LayerStats, LinearInstr, TilePlan)
+                                  GoldenRecord, LayerStats, LinearInstr,
+                                  TilePlan)
 from repro.kernels import binary_conv as bck
 from repro.kernels import binary_dwconv as bdw
 from repro.kernels import binary_matmul as bmk
@@ -194,7 +197,8 @@ def _compile_linear(spec, p, shape, quant):
 
 def compile(params: dict, arch: str, quant: QuantConfig,
             input_shape: tuple[int, ...], *,
-            verify: bool = False) -> BinArrayProgram:
+            verify: bool = False,
+            golden: bool | int = True) -> BinArrayProgram:
     """Compile a network into a :class:`BinArrayProgram`.
 
     params:      fp tree (binarized here with ``quant``), a packed tree from
@@ -216,6 +220,13 @@ def compile(params: dict, arch: str, quant: QuantConfig,
                  plans, VMEM overruns) before the program ever reaches a
                  TPU.  Off by default — the CLI gate
                  (``tools/verify_program.py``) covers the shipped programs.
+    golden:      record a :class:`~repro.deploy.program.GoldenRecord` (the
+                 compile-time BIST: seeded probe input executed once per
+                 §IV-D rung, output digests frozen — see deploy/selftest.py).
+                 True (default) uses seed 0; an int supplies the probe seed;
+                 False skips it (e.g. multi-minute 224² compiles whose
+                 callers never self-test).  Automatically skipped under
+                 ``jax.eval_shape`` — abstract programs carry ``golden=None``.
 
     All scheduling (``pick_tile`` / ``pick_tile_dw`` / ``pick_matmul_plan``)
     happens HERE — ``execute`` runs zero plan picks inside its trace
@@ -240,6 +251,15 @@ def compile(params: dict, arch: str, quant: QuantConfig,
         arch=arch if isinstance(arch, str) else "custom",
         input_shape=tuple(int(d) for d in input_shape),
         interpret=quant.interpret)
+    if golden is not False and not any(
+            isinstance(leaf, jax.core.Tracer)
+            for leaf in jax.tree_util.tree_leaves(program)):
+        # deferred import: selftest pulls in the executor
+        from repro.deploy.selftest import compute_golden
+
+        seed = 0 if golden is True else int(golden)
+        program = dataclasses.replace(
+            program, golden=compute_golden(program, seed=seed))
     if verify:
         # deferred import: analysis depends on deploy.program, and pulling
         # the verifier in only when asked keeps plain compiles light
@@ -277,10 +297,25 @@ def abstract_program(arch: str, quant: QuantConfig,
 def save_program(manager, step: int, program: BinArrayProgram, *,
                  extra: dict | None = None) -> str:
     """Persist a compiled program (packed weights; plans/stats ride in the
-    pytree structure, which the restore target re-supplies)."""
+    pytree structure, which the restore target re-supplies).  The program's
+    :class:`GoldenRecord` is serialized into the (digest-protected)
+    manifest so :func:`load_program` can re-attach it even when the restore
+    target is an abstract program with ``golden=None``."""
     meta = {"deploy": program.totals()}
+    if program.golden is not None:
+        meta["golden"] = program.golden.to_json()
     meta.update(extra or {})
     return manager.save(step, {"program": program}, extra=meta)
+
+
+def _attach_golden(program: BinArrayProgram, extra) -> BinArrayProgram:
+    """Re-attach the manifest's golden record when the restore target had
+    none (`manager.restore` takes aux data from the target, not disk)."""
+    if program.golden is None and isinstance(extra, dict) \
+            and extra.get("golden"):
+        return dataclasses.replace(
+            program, golden=GoldenRecord.from_json(extra["golden"]))
+    return program
 
 
 class ProgramIntegrityError(ValueError):
@@ -308,8 +343,8 @@ def load_program(manager, step: int, like: BinArrayProgram, *,
     for hot loops that verify out of band (the fuzz tier compiles, verifies,
     and round-trips thousands of programs per run).
     """
-    restored, _ = manager.restore(step, {"program": like})
-    program = restored["program"]
+    restored, extra = manager.restore(step, {"program": like})
+    program = _attach_golden(restored["program"], extra)
     if verify:
         # deferred import, same reason as compile(verify=True)
         from repro.analysis.verify import verify_program
@@ -323,3 +358,38 @@ def load_program(manager, step: int, like: BinArrayProgram, *,
                 + "\n  ".join(str(f) for f in errors),
                 findings=errors)
     return program
+
+
+def load_latest_good(manager, like: BinArrayProgram, *, verify: bool = True,
+                     selftest: bool = True):
+    """Restore the newest checkpoint step whose program passes every gate.
+
+    Wraps ``CheckpointManager.restore_latest_good``: the walk runs
+    newest-first; any step failing digest verification, static verification
+    (``verify``), or the golden self-test (``selftest``, when the saved
+    program carries a :class:`GoldenRecord`) is quarantined with its reason
+    and the walk continues.  Returns ``(step, program)``; raises
+    :class:`~repro.checkpoint.manager.NoGoodCheckpoint` when every step is
+    bad — a state the caller must handle loudly, not paper over.
+    """
+    def validate(restored, extra):
+        program = _attach_golden(restored["program"], extra)
+        if verify:
+            from repro.analysis.verify import verify_program
+
+            errors = [f for f in verify_program(program)
+                      if f.severity == "ERROR"]
+            if errors:
+                raise ProgramIntegrityError(
+                    f"restored program failed verification with "
+                    f"{len(errors)} ERROR finding(s):\n  "
+                    + "\n  ".join(str(f) for f in errors),
+                    findings=errors)
+        if selftest and program.golden is not None:
+            from repro.deploy.selftest import self_test
+
+            self_test(program)
+
+    step, restored, extra = manager.restore_latest_good(
+        {"program": like}, validate=validate)
+    return step, _attach_golden(restored["program"], extra)

@@ -168,6 +168,47 @@ _register(LinearInstr, ("B_packed", "alpha", "bias"))
 
 
 @dataclasses.dataclass(frozen=True)
+class GoldenRecord:
+    """Compile-time BIST reference: seeded input spec + output digests.
+
+    ``deploy.compile`` runs a canonical probe input (batch 1, drawn from
+    ``jax.random.normal(PRNGKey(seed), input_shape)``) through every §IV-D
+    rung once and records the CRC32 of each output — the expected answers a
+    deployed program must still produce.  ``deploy.self_test`` replays the
+    probe and compares digests: the dynamic check that catches in-memory /
+    packed-buffer corruption static verification cannot.
+
+    Frozen + all-tuple, so it is hashable and rides in the pytree aux data
+    (a golden change is a retrace, like any other static field), and
+    trivially JSON-able for the checkpoint manifest.
+    """
+
+    seed: int
+    input_shape: tuple[int, ...]                       # probe shape, batch 1
+    digests: tuple[tuple[tuple[int, ...], str], ...]   # (schedule, crc32 hex)
+
+    def schedules(self) -> tuple[tuple[int, ...], ...]:
+        return tuple(s for s, _ in self.digests)
+
+    def digest_for(self, schedule: tuple[int, ...]) -> str | None:
+        for s, d in self.digests:
+            if s == tuple(schedule):
+                return d
+        return None
+
+    def to_json(self) -> dict:
+        return {"seed": self.seed, "input_shape": list(self.input_shape),
+                "digests": [[list(s), d] for s, d in self.digests]}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "GoldenRecord":
+        return cls(seed=int(doc["seed"]),
+                   input_shape=tuple(int(v) for v in doc["input_shape"]),
+                   digests=tuple((tuple(int(m) for m in s), str(d))
+                                 for s, d in doc["digests"]))
+
+
+@dataclasses.dataclass(frozen=True)
 class BinArrayProgram:
     """A compiled network: a macro-instruction stream plus program facts.
 
@@ -175,13 +216,16 @@ class BinArrayProgram:
     executing other batch sizes stays *correct* (the kernels clamp and
     remain bit-exact across tilings), just not necessarily optimal.
     ``interpret`` records the compile-time default for the Pallas interpret
-    flag (CPU validation); ``execute`` can override it.
+    flag (CPU validation); ``execute`` can override it.  ``golden`` is the
+    compile-time :class:`GoldenRecord` (None for abstract programs and
+    ``compile(..., golden=False)``).
     """
 
     instrs: tuple[Instr, ...]
     arch: str = ""
     input_shape: tuple[int, ...] = ()
     interpret: bool = False
+    golden: GoldenRecord | None = None
 
     def __len__(self) -> int:
         return len(self.instrs)
@@ -263,9 +307,10 @@ class BinArrayProgram:
 jax.tree_util.register_pytree_with_keys(
     BinArrayProgram,
     lambda p: ([(jax.tree_util.GetAttrKey("instrs"), p.instrs)],
-               (p.arch, p.input_shape, p.interpret)),
+               (p.arch, p.input_shape, p.interpret, p.golden)),
     lambda aux, children: BinArrayProgram(
         instrs=tuple(children[0]), arch=aux[0], input_shape=aux[1],
-        interpret=aux[2]),
-    flatten_func=lambda p: ((p.instrs,), (p.arch, p.input_shape, p.interpret)),
+        interpret=aux[2], golden=aux[3]),
+    flatten_func=lambda p: ((p.instrs,),
+                            (p.arch, p.input_shape, p.interpret, p.golden)),
 )

@@ -1,0 +1,136 @@
+"""Golden self-test: the program's built-in self-test (BIST).
+
+The paper's accelerator executes a frozen instruction stream against packed
+weight memory with *no runtime fallback* — which means a flipped bit in
+``B_tap_packed`` is Mosaic-legal, passes every static check
+(``analysis.verify_program``), and silently corrupts every answer.  The
+defense deployed hardware uses is a BIST: a known input with a known answer,
+replayed on demand.
+
+``compute_golden`` runs a seeded canonical probe input through every §IV-D
+rung of a program once (at compile time) and records the CRC32 of each
+output into a :class:`~repro.deploy.program.GoldenRecord`.  ``self_test``
+replays the probe through ``execute`` and compares digests — any in-memory
+corruption of packed weights, alphas, or biases changes the bits of at
+least the full-M output and raises :class:`SelfTestFailure` naming the
+rung and both digests.
+
+The self-test always measures the *clean* execute path: the fault
+injector's wrapper (``repro.testing.faults``) marks itself with
+``_clean_execute``, and :func:`_execute` unwraps it at call time — the
+BIST diagnoses the program, not the harness.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import crc32_hex
+from repro.deploy.program import BinArrayProgram, GoldenRecord
+
+
+def _execute(program, x, m_active):
+    """The clean executor, unwrapping any live fault-injection patch."""
+    from repro.deploy import executor
+
+    fn = executor.execute
+    while hasattr(fn, "_clean_execute"):
+        fn = fn._clean_execute
+    return fn(program, x, m_active)
+
+
+class SelfTestFailure(RuntimeError):
+    """A golden replay produced bytes that no longer match the record."""
+
+    def __init__(self, message: str, *, rung: tuple[int, ...],
+                 expected: str, actual: str):
+        super().__init__(message)
+        self.rung = rung
+        self.expected = expected
+        self.actual = actual
+
+
+def golden_rungs(program: BinArrayProgram) -> tuple[tuple[int, ...], ...]:
+    """Every §IV-D rung a served program can run at, full-M first.
+
+    The candidate list mirrors ``serve_cnn.slo.default_ladder`` *before* its
+    cost filter: the full packed schedule, then for each global m below
+    ``m_max`` the front-half-at-m schedule and the global-m schedule.  The
+    ladder filters this same list, so every ladder rung is guaranteed a
+    recorded digest.
+    """
+    full = program.resolve_schedule(None)
+    rungs = [full]
+    n = len(program.instrs)
+    half = n // 2
+    for m in range(program.m_max - 1, 0, -1):
+        front = tuple(min(m, s) if i < half else s
+                      for i, s in enumerate(full))
+        for cand in (front, program.resolve_schedule(m)):
+            if cand not in rungs:
+                rungs.append(cand)
+    return tuple(rungs)
+
+
+def golden_input(seed: int, input_shape: tuple[int, ...]) -> jax.Array:
+    """The canonical probe input: seeded standard normal, batch 1."""
+    return jax.random.normal(jax.random.PRNGKey(seed), tuple(input_shape),
+                             dtype="float32")
+
+
+def output_digest(y) -> str:
+    """CRC32 of the raw output bytes — bit-exact, not allclose."""
+    return crc32_hex(np.ascontiguousarray(np.asarray(y)).tobytes())
+
+
+def compute_golden(program: BinArrayProgram, *, seed: int = 0,
+                   rungs=None) -> GoldenRecord:
+    """Execute the probe at every rung once and record the output digests."""
+    if rungs is None:
+        rungs = golden_rungs(program)
+    shape = (1,) + tuple(program.input_shape[1:])
+    x = golden_input(seed, shape)
+    digests = []
+    seen = set()
+    for r in rungs:
+        sched = program.resolve_schedule(r)
+        if sched in seen:
+            continue
+        seen.add(sched)
+        digests.append(
+            (sched, output_digest(_execute(program, x, sched))))
+    return GoldenRecord(seed=seed, input_shape=shape,
+                        digests=tuple(digests))
+
+
+def self_test(program: BinArrayProgram, *, rungs=None) -> int:
+    """Replay the golden probe; raise :class:`SelfTestFailure` on any
+    digest mismatch.  ``rungs=None`` checks every recorded rung; otherwise
+    only the given schedules (each must be recorded).  Returns the number
+    of rungs checked."""
+    rec = program.golden
+    if rec is None:
+        raise ValueError(
+            "program has no GoldenRecord — compile with golden=True (the "
+            "default) or attach one via compute_golden")
+    if rungs is None:
+        targets = rec.schedules()
+    else:
+        targets = tuple(program.resolve_schedule(r) for r in rungs)
+    x = golden_input(rec.seed, rec.input_shape)
+    checked = 0
+    for sched in targets:
+        want = rec.digest_for(sched)
+        if want is None:
+            raise ValueError(
+                f"schedule {sched} has no recorded golden digest "
+                f"(recorded: {list(rec.schedules())})")
+        got = output_digest(_execute(program, x, sched))
+        if got != want:
+            raise SelfTestFailure(
+                f"golden self-test failed at rung {sched}: output digest "
+                f"{got} != recorded {want} — the program's packed state "
+                f"no longer produces its compile-time answers",
+                rung=sched, expected=want, actual=got)
+        checked += 1
+    return checked

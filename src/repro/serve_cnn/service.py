@@ -24,6 +24,16 @@ Dispositions:
     request *at submit* with a named reason (``stats["shed"]``), instead of
     letting the queue grow without bound.  Requests whose deadline expires
     while queued are shed at dispatch, not executed past their deadline.
+  * **in-memory program corruption** — a budgeted watchdog
+    (``selftest_every``) replays the compile-time golden probe
+    (``deploy.self_test``) on the active rung every N batches and on every
+    rung change; a digest mismatch quarantines the live program and
+    hot-reloads the last-known-good checkpoint
+    (``deploy.load_latest_good``), re-runs the self-test, and resumes —
+    counted in ``stats`` (``selftest_runs`` / ``selftest_failures`` /
+    ``reloads`` / ``quarantined_steps``) and *loud* (the original
+    ``SelfTestFailure`` propagates) when no checkpoint manager was wired
+    or the recovery walk exhausts.
 
 Batches are always zero-padded to the configured ``batch_size``, so the
 executor sees one input shape and compiles exactly one variant per ladder
@@ -105,6 +115,18 @@ class CNNService:
                   late-binds ``repro.deploy.executor.execute`` so
                   fault-injection patches apply.
     interpret:    Pallas interpret override passed through to the executor.
+    selftest_every: run the golden self-test (``deploy.self_test``, always
+                  the *clean* execute path — the BIST diagnoses the program,
+                  not the fault harness) on the active rung every this-many
+                  served batches, plus once at startup and on every rung
+                  change.  Requires the program to carry a GoldenRecord.
+                  None (default) disables the watchdog.
+    checkpoint_manager / restore_like: recovery source for the watchdog —
+                  on a self-test failure the live program is quarantined
+                  and ``deploy.load_latest_good(checkpoint_manager,
+                  restore_like)`` hot-reloads the newest checkpoint that
+                  passes digests + verification + self-test.  Without them
+                  a self-test failure raises (loud, by design).
     """
 
     def __init__(self, program: BinArrayProgram, *,
@@ -118,11 +140,22 @@ class CNNService:
                  sleep=time.sleep,
                  execute_fn=None,
                  interpret: bool | None = None,
-                 initial_rung: int = 0):
+                 initial_rung: int = 0,
+                 selftest_every: int | None = None,
+                 checkpoint_manager=None,
+                 restore_like: BinArrayProgram | None = None):
         if batch_size < 1 or max_queue < 1:
             raise ValueError(
                 f"batch_size ({batch_size}) and max_queue ({max_queue}) "
                 "must be >= 1")
+        if selftest_every is not None:
+            if selftest_every < 1:
+                raise ValueError(
+                    f"selftest_every must be >= 1, got {selftest_every}")
+            if program.golden is None:
+                raise ValueError(
+                    "selftest_every requires a program with a GoldenRecord "
+                    "(deploy.compile(..., golden=True), the default)")
         self.program = program
         self.batch_size = int(batch_size)
         self.max_queue = int(max_queue)
@@ -132,6 +165,12 @@ class CNNService:
         self.sleep = sleep
         self.interpret = interpret
         self._execute_fn = execute_fn
+        self.selftest_every = selftest_every
+        self.checkpoint_manager = checkpoint_manager
+        self.restore_like = restore_like
+        self._last_selftest_batch: int | None = None
+        self.last_reload_step: int | None = None
+        self.quarantined_program: BinArrayProgram | None = None
         self.controller = SLOController(
             tuple(ladder) if ladder is not None else default_ladder(program),
             slo, initial_rung=initial_rung)
@@ -147,7 +186,10 @@ class CNNService:
             "exec_failed_batches": 0, "shed_count": 0,
             "shed": {r: 0 for r in SHED_REASONS},
             "fault_types": {}, "rung_hist": {},
+            "selftest_runs": 0, "selftest_failures": 0, "reloads": 0,
+            "quarantined_steps": 0,
         }
+        self._last_rung = self.controller.rung
 
     # ------------------------------------------------------------ admit ---
     def submit(self, image, deadline_s: float | None = None) -> ImageRequest:
@@ -196,7 +238,11 @@ class CNNService:
         """Serve one batch: assemble, execute at the controller's rung with
         bounded retry, screen for non-finite outputs, record latencies, run
         one SLO update.  Returns every request that left the system this
-        step (done, failed, or shed-at-dispatch)."""
+        step (done, failed, or shed-at-dispatch).  The integrity watchdog
+        (when configured) runs *before* batch assembly, so a corrupt program
+        is replaced before it can answer this step's requests."""
+        if self.selftest_every is not None:
+            self._watchdog()
         finished: list[ImageRequest] = []
         batch: list[ImageRequest] = []
         while self.queue and len(batch) < self.batch_size:
@@ -269,6 +315,65 @@ class CNNService:
                 finished.append(req)
         self.controller.update()
         return finished
+
+    # --------------------------------------------------------- watchdog ---
+    def _watchdog(self) -> None:
+        """Budgeted integrity check: golden self-test on the active rung
+        every ``selftest_every`` served batches and on every rung change
+        (each compiled rung variant gets re-attested when it comes live)."""
+        rung = self.controller.rung
+        due = (rung != self._last_rung
+               or self._last_selftest_batch is None
+               or (self._stats["batches"] - self._last_selftest_batch
+                   >= self.selftest_every))
+        self._last_rung = rung
+        if not due:
+            return
+        self._last_selftest_batch = self._stats["batches"]
+        self._selftest_rungs(self._watch_rungs(self.program))
+
+    def _watch_rungs(self, program):
+        """The active rung when the golden record covers it, else full-M
+        (rung 0 of golden_rungs — always recorded)."""
+        sched = program.resolve_schedule(self.controller.schedule)
+        if program.golden.digest_for(sched) is not None:
+            return (sched,)
+        return (program.resolve_schedule(None),)
+
+    def _selftest_rungs(self, rungs) -> None:
+        from repro.deploy.selftest import SelfTestFailure, self_test
+
+        self._stats["selftest_runs"] += 1
+        try:
+            self_test(self.program, rungs=rungs)
+        except SelfTestFailure as e:
+            self._stats["selftest_failures"] += 1
+            self._recover(e)
+
+    def _recover(self, cause) -> None:
+        """Quarantine the live program and hot-reload the last-known-good
+        checkpoint.  Loud when recovery is impossible: without a wired
+        checkpoint manager the original failure propagates, and an
+        exhausted walk raises ``NoGoodCheckpoint`` — a service that cannot
+        prove its answers right anymore must not keep serving."""
+        self.quarantined_program = self.program
+        if self.checkpoint_manager is None or self.restore_like is None:
+            raise cause
+        from repro.deploy.compiler import load_latest_good
+        from repro.deploy.selftest import self_test
+
+        before = len(self.checkpoint_manager.quarantined)
+        step, fresh = load_latest_good(
+            self.checkpoint_manager, self.restore_like)
+        self._stats["quarantined_steps"] += (
+            len(self.checkpoint_manager.quarantined) - before)
+        # the walk already self-tested every recorded rung; re-run on the
+        # rung this service is actually serving as the explicit resume gate
+        self._stats["selftest_runs"] += 1
+        self_test(fresh, rungs=self._watch_rungs(fresh))
+        self.program = fresh
+        self._stats["reloads"] += 1
+        self.last_reload_step = step
 
     def _execute(self, x, sched):
         if self._execute_fn is not None:

@@ -57,18 +57,17 @@ def default_ladder(program: BinArrayProgram) -> tuple[tuple[int, ...], ...]:
     §IV-D switch at m.  Candidates that do not strictly reduce cost (tiny or
     already-M=1 programs) are dropped, so every program gets a valid ladder —
     possibly of length 1, in which case the controller's only move is shed.
+
+    The candidate list is ``deploy.selftest.golden_rungs`` — the same rungs
+    ``deploy.compile`` records golden digests for — so every ladder rung the
+    service can run at is guaranteed a recorded BIST digest.
     """
-    n = len(program.instrs)
-    half = n // 2
-    full = program.resolve_schedule(None)
-    ladder = [full]
-    for m in range(program.m_max - 1, 0, -1):
-        front = tuple(min(m, i.M) if idx < half else i.M
-                      for idx, i in enumerate(program.instrs))
-        for cand in (front, program.resolve_schedule(m)):
-            if schedule_cost(program, cand) < schedule_cost(
-                    program, ladder[-1]):
-                ladder.append(cand)
+    from repro.deploy.selftest import golden_rungs
+    ladder = []
+    for cand in golden_rungs(program):
+        if not ladder or schedule_cost(program, cand) < schedule_cost(
+                program, ladder[-1]):
+            ladder.append(cand)
     return tuple(ladder)
 
 

@@ -75,7 +75,9 @@ class FaultInjector:
         self.sleep = sleep
         self.rng = np.random.default_rng(plan.seed)
         self.counts = {"calls": 0, "latency": 0, "error": 0, "nan": 0,
-                       "inf": 0, "restores": 0, "truncate": 0}
+                       "inf": 0, "restores": 0, "truncate": 0,
+                       "bitflip_disk": 0, "bitflip_mem": 0,
+                       "manifest_tamper": 0, "missing_npz": 0}
 
     # ---------------------------------------------------------- executor ---
     def wrap_execute(self, fn):
@@ -103,6 +105,10 @@ class FaultInjector:
                 out = out.at[(0,) * out.ndim].set(float("inf"))
             return out
 
+        # deploy.selftest unwraps this marker so the golden BIST always
+        # measures the clean execute path, even when the injector's patch
+        # is live module-wide
+        wrapped._clean_execute = fn
         return wrapped
 
     # -------------------------------------------------------- checkpoint ---
@@ -128,6 +134,102 @@ class FaultInjector:
             return restored, extra
 
         return wrapped
+
+    # ------------------------------------------ one-shot integrity faults ---
+    # Deliberate, ledgered damage to checkpoint/program state — the inputs
+    # of the integrity subsystem (checkpoint digests, golden self-test,
+    # service hot-reload).  Each is a single seeded act, not a rate: tests
+    # reconcile recovery counters against these ledger entries exactly.
+
+    def flip_bit_on_disk(self, step_dir: str, *, leaf: str | None = None,
+                         prefer: str = "packed") -> str:
+        """Flip one seeded bit inside one leaf of a saved ``host_*.npz``.
+
+        ``prefer="packed"`` targets a bit-packed weight leaf
+        (``B_tap_packed``/``B_packed``) when one exists — the exact damage
+        class the paper's weight memory is exposed to.  Any flipped bit
+        changes the leaf's CRC32, so restore must raise
+        ``ChecksumMismatch`` naming the leaf.  Returns the npz key flipped.
+        """
+        import glob
+        import os
+
+        path = sorted(glob.glob(os.path.join(step_dir, "host_*.npz")))[0]
+        data = dict(np.load(path))
+        keys = sorted(data)
+        if leaf is None:
+            packed = [k for k in keys
+                      if "B_tap_packed" in k or "B_packed" in k]
+            pool = packed if (prefer == "packed" and packed) else keys
+            leaf = pool[int(self.rng.integers(len(pool)))]
+        arr = np.ascontiguousarray(data[leaf]).copy()
+        flat = arr.view(np.uint8).reshape(-1)
+        flat[int(self.rng.integers(flat.size))] ^= np.uint8(
+            1 << int(self.rng.integers(8)))
+        data[leaf] = arr
+        np.savez(path, **data)
+        self.counts["bitflip_disk"] += 1
+        return leaf
+
+    def flip_bit_in_program(self, program, *, instr: int = 0):
+        """Return a copy of ``program`` with one bit flipped in the packed
+        weight buffer of instruction ``instr`` — in-memory corruption that
+        every static check passes and only the golden self-test catches.
+
+        The flip lands in *level 0* (every §IV-D rung applies level 0, so
+        every rung's digest changes) at a byte whose packed-axis index is 0
+        with bit 0 set — packing is LSB-first (``core.binarize.pack_bits``),
+        so that bit is always a real channel/input, never byte padding.
+        """
+        import dataclasses as dc
+
+        import jax.numpy as jnp
+
+        ins = program.instrs[instr]
+        field = "B_tap_packed" if hasattr(ins, "B_tap_packed") else "B_packed"
+        arr = np.asarray(getattr(ins, field)).copy()
+        # arr[0] is level 0.  Conv [T, C8, D] / linear [K8, N] carry the
+        # packed axis second-to-last — pin it to byte 0, draw the trailing
+        # lane; depth-wise [T, C8] packs along the *trailing* axis — pin it
+        # to byte 0, draw the tap.  Bit 0 of byte 0 is channel/input 0.
+        if getattr(ins, "kind", "") == "dwconv":
+            pos = (0, int(self.rng.integers(arr.shape[1])), 0)
+        else:
+            lane = int(self.rng.integers(arr.shape[-1]))
+            pos = (0,) * (arr.ndim - 2) + (0, lane)
+        arr[pos] ^= np.uint8(1)
+        flipped = dc.replace(ins, **{field: jnp.asarray(arr)})
+        instrs = (program.instrs[:instr] + (flipped,)
+                  + program.instrs[instr + 1:])
+        self.counts["bitflip_mem"] += 1
+        return dc.replace(program, instrs=instrs)
+
+    def tamper_manifest(self, step_dir: str, *, key: str = "step") -> None:
+        """Rewrite one manifest field without updating the manifest digest —
+        the stale/tampered-metadata class ``ManifestMismatch`` must catch."""
+        import json
+        import os
+
+        path = os.path.join(step_dir, "manifest.json")
+        with open(path) as f:
+            meta = json.load(f)
+        meta[key] = (meta.get(key, 0) + 1 if isinstance(meta.get(key), int)
+                     else "tampered")
+        with open(path, "w") as f:
+            json.dump(meta, f)
+        self.counts["manifest_tamper"] += 1
+
+    def remove_npz(self, step_dir: str) -> str:
+        """Delete the step's array payload, leaving the manifest — a partial
+        directory that restore must reject and the latest-good walk must
+        skip.  Returns the removed path."""
+        import glob
+        import os
+
+        path = sorted(glob.glob(os.path.join(step_dir, "host_*.npz")))[0]
+        os.remove(path)
+        self.counts["missing_npz"] += 1
+        return path
 
 
 @contextlib.contextmanager

@@ -25,12 +25,14 @@ synthetic loops:
   * ``cnn_server_scenario`` — ``serve_cnn.CNNService`` under *faulty*
     cyclic traffic: a seeded ``testing.faults`` injector alternates clean /
     fault-storm / clean phases (latency spikes, raised exceptions, NaN
-    outputs) on a virtual clock, so the SLO controller demonstrably walks
-    down the §IV-D ladder under pressure and back to full-M after — while
-    every completed answer is verified bit-exact against the *unfaulted*
-    ``deploy.execute`` on the same padded batch, and every injected fault
-    reconciles against the service's disposition counters (zero silently
-    swallowed).
+    outputs, plus one disk + one in-memory bit-flip per storm) on a
+    virtual clock, so the SLO controller demonstrably walks down the
+    §IV-D ladder under pressure and back to full-M after, and the golden
+    watchdog demonstrably hot-reloads through the last-known-good
+    checkpoint walk — while every completed answer is verified bit-exact
+    against the *unfaulted* ``deploy.execute`` on the same padded batch,
+    and every injected fault reconciles against the service's disposition
+    counters (zero silently swallowed).
 """
 from __future__ import annotations
 
@@ -215,8 +217,9 @@ def tiny_cnn_program(*, batch: int = 4, m: int = 2, seed: int = 0):
 
 
 def cnn_server_scenario(*, seed: int = 0, cycle: int = 54,
-                        batch_size: int = 4, verify_every: int = 3
-                        ) -> Scenario:
+                        batch_size: int = 4, verify_every: int = 3,
+                        directory: str | None = None,
+                        selftest_every: int = 3) -> Scenario:
     """Faulty cyclic traffic against :class:`repro.serve_cnn.CNNService`.
 
     Each ``cycle`` (default 54 steps — phases long enough that the full
@@ -233,16 +236,33 @@ def cnn_server_scenario(*, seed: int = 0, cycle: int = 54,
          soak warmup window, so the compiled-variant gauges are flat after);
       3. **clean again** — pressure clears and the controller climbs back.
 
+    On top of the rate faults, every storm carries one **bit-flip pair**:
+    the latest on-disk checkpoint step takes a seeded flip in a packed
+    leaf at the storm's first step, and the *live program* takes an
+    in-memory packed-buffer flip six steps later.  The service's golden
+    watchdog (``selftest_every``) detects the memory flip within its
+    budget, quarantines the program, and hot-reloads through
+    ``restore_latest_good`` — which hits the disk-flipped step first,
+    quarantines it (``ChecksumMismatch``), and falls back to the previous
+    good step.  One fresh step is saved at the start of every cycle, so
+    the walk always has a fallback; the count of live (non-quarantined)
+    step dirs stays bounded by ``keep`` while the quarantine ledger grows
+    by exactly one per storm — both reconciled in ``progress()``.
+
     Traffic: ``batch_size`` requests per step (no backlog growth), plus a
     request with a too-tight virtual deadline every 6th step (shed at
     *dispatch*) and an already-expired one every 13th (shed at *admit*).
     Every ``verify_every``-th step the completed logits are compared
     **bit-exact** against the clean ``deploy.execute`` on the service's own
-    padded batch at the served schedule; ``progress()`` exposes the
-    verified/mismatch counters, the service's disposition stats, and the
-    injector ledger so the soak test can reconcile injected == observed.
+    padded batch at the served schedule (including right after every
+    recovery); ``progress()`` exposes the verified/mismatch counters, the
+    service's disposition stats, and the injector ledger so the soak test
+    can reconcile injected == observed.
     """
+    import tempfile
+
     from repro import deploy
+    from repro.checkpoint.manager import CheckpointManager
     from repro.deploy import executor
     from repro.serve_cnn import CNNService, SLOConfig
     from repro.testing.faults import FaultInjector, FaultPlan, ManualClock
@@ -254,6 +274,17 @@ def cnn_server_scenario(*, seed: int = 0, cycle: int = 54,
     clean = FaultPlan(seed=seed)
     storm = FaultPlan(latency_rate=0.9, latency_s=0.05, error_rate=0.15,
                       nan_rate=0.10, seed=seed)
+    if directory is None:
+        directory = tempfile.mkdtemp(prefix="soak_ckpt_")
+    mgr = CheckpointManager(directory, keep=4)
+    next_step = [0]
+
+    def save_step():
+        next_step[0] += 1
+        deploy.save_program(mgr, next_step[0], program)
+
+    save_step()
+    save_step()     # two good steps before any corruption
     svc = CNNService(
         program,
         slo=SLOConfig(target_ms=10.0, window=16, min_samples=8,
@@ -261,14 +292,23 @@ def cnn_server_scenario(*, seed: int = 0, cycle: int = 54,
         batch_size=batch_size, max_queue=4 * batch_size,
         max_retries=4, backoff_s=0.001,
         clock=clock, sleep=clock.sleep,
-        execute_fn=inj.wrap_execute(executor.execute))
+        execute_fn=inj.wrap_execute(executor.execute),
+        selftest_every=selftest_every, checkpoint_manager=mgr,
+        restore_like=dataclasses.replace(program, golden=None))
     rng = np.random.default_rng(seed + 1)
     counters = {"verified": 0, "mismatches": 0, "submitted": 0,
                 "done": 0, "failed": 0}
 
     def step(i: int) -> None:
-        phase = ((i - 1) % cycle) // (cycle // 3)
+        offset = (i - 1) % cycle
+        phase = offset // (cycle // 3)
         inj.plan = storm if phase == 1 else clean
+        if offset == 0:
+            save_step()                       # fresh fallback every cycle
+        if offset == cycle // 3:              # storm opens: rot the newest
+            inj.flip_bit_on_disk(mgr._step_dir(mgr.latest_step()))
+        if offset == cycle // 3 + 6:          # mid-storm: corrupt the live
+            svc.program = inj.flip_bit_in_program(svc.program)
         clock.advance(0.001)
         for _ in range(batch_size):
             img = rng.standard_normal(program.input_shape[1:],
@@ -298,7 +338,9 @@ def cnn_server_scenario(*, seed: int = 0, cycle: int = 54,
 
     def progress() -> dict:
         return {**counters, "stats": svc.stats,
-                "injected": dict(inj.counts)}
+                "injected": dict(inj.counts),
+                "ckpt_live_steps": len(mgr.all_steps()),
+                "ckpt_quarantined": len(mgr.quarantine_dirs())}
 
     return Scenario(
         name="cnn_server_faulty",

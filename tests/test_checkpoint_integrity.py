@@ -1,0 +1,401 @@
+"""End-to-end program integrity: checksummed checkpoints, last-known-good
+recovery, golden self-test (BIST), and service hot-reload.
+
+Fault matrix (docs/checkpointing.md): every corruption class the stack
+defends against is seeded here by ``repro.testing.faults`` and asserted to
+be (a) detected with a typed error naming the damage and (b) recovered
+from via quarantine + latest-good fallback or service hot-reload — with
+bit-exact answers afterwards and every fault accounted for in a ledger.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import deploy
+from repro.checkpoint.manager import (CheckpointCorruption, CheckpointManager,
+                                      ChecksumMismatch, LeafMismatch,
+                                      ManifestMismatch, NoGoodCheckpoint,
+                                      crc32_hex)
+from repro.testing.faults import FaultInjector, FaultPlan, ManualClock
+from repro.testing.scenarios import tiny_cnn_program
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _state():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones(4, jnp.float32)},
+            "step": jnp.int32(3)}
+
+
+def _injector():
+    return FaultInjector(FaultPlan(seed=11))
+
+
+@pytest.fixture(scope="module")
+def program():
+    return tiny_cnn_program(batch=2)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint layer: digests, typed detection, quarantine, latest-good walk
+# ---------------------------------------------------------------------------
+
+class TestChecksums:
+    def test_manifest_records_digests(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        with open(tmp_path / "step_0000000001" / "manifest.json") as f:
+            meta = json.load(f)
+        assert meta["manifest_crc32"]
+        for key, info in meta["leaves"].items():
+            assert set(info) == {"shape", "dtype", "crc32"}, key
+            assert len(info["crc32"]) == 8
+        # digest is of the bytes actually on disk (jnp default is float32)
+        w = np.arange(12, dtype=np.float32).reshape(3, 4)
+        assert meta["leaves"]["params/w"]["crc32"] == crc32_hex(w.tobytes())
+
+    def test_scalar_leaf_shape_roundtrip(self, tmp_path):
+        """0-d leaves must stay 0-d (np.ascontiguousarray promotes to (1,),
+        which the strict shape check would then reject)."""
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        restored, _ = mgr.restore(1, _state())
+        assert np.shape(restored["step"]) == ()
+        assert int(restored["step"]) == 3
+
+    def test_disk_bitflip_detected_and_named(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        leaf = _injector().flip_bit_on_disk(mgr._step_dir(1))
+        with pytest.raises(ChecksumMismatch) as ei:
+            mgr.restore(1, _state())
+        err = ei.value
+        assert err.leaf.replace("/", "__") == leaf
+        assert err.step == 1 and err.expected != err.actual
+        assert err.leaf in str(err)
+
+    def test_manifest_tamper_detected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        _injector().tamper_manifest(mgr._step_dir(1))
+        with pytest.raises(ManifestMismatch):
+            mgr.restore(1, _state())
+
+    def test_missing_npz_detected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        _injector().remove_npz(mgr._step_dir(1))
+        with pytest.raises(CheckpointCorruption, match="npz missing"):
+            mgr.restore(1, _state())
+
+    def test_shape_mismatch_is_loud(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"w": jnp.ones((3, 4))})
+        with pytest.raises(LeafMismatch, match="'w'.*shape"):
+            mgr.restore(1, {"w": jnp.ones((4, 3))})
+
+    def test_verify_step_reports_problems(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        assert mgr.verify_step(1) == []
+        _injector().flip_bit_on_disk(mgr._step_dir(1))
+        problems = mgr.verify_step(1)
+        assert len(problems) == 1 and "digest" in problems[0]
+
+
+class TestLatestGood:
+    def test_falls_back_and_quarantines(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        mgr.save(2, _state())
+        _injector().flip_bit_on_disk(mgr._step_dir(2))
+        step, restored, _ = mgr.restore_latest_good(_state())
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      np.asarray(_state()["params"]["w"]))
+        # the bad step is renamed aside (never deleted) with its reason
+        assert mgr.all_steps() == [1]
+        (qdir,) = mgr.quarantine_dirs()
+        with open(tmp_path / qdir / "quarantine.json") as f:
+            ledger = json.load(f)
+        assert ledger["step"] == 2 and "digest" in ledger["reason"]
+        assert mgr.quarantined == [(2, ledger["reason"])]
+
+    def test_validate_hook_rejections_quarantine_too(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state(), extra={"tag": "good"})
+        mgr.save(2, _state(), extra={"tag": "bad"})
+
+        def validate(restored, extra):
+            if extra.get("tag") == "bad":
+                raise ValueError("rejected by policy")
+
+        step, _, extra = mgr.restore_latest_good(_state(), validate=validate)
+        assert step == 1 and extra["tag"] == "good"
+        assert mgr.quarantined[0][0] == 2
+        assert "rejected by policy" in mgr.quarantined[0][1]
+
+    def test_exhausted_walk_is_loud(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        inj = _injector()
+        for s in (1, 2):
+            mgr.save(s, _state())
+            inj.flip_bit_on_disk(mgr._step_dir(s))
+        with pytest.raises(NoGoodCheckpoint, match="step 1.*digest"):
+            mgr.restore_latest_good(_state())
+        assert mgr.all_steps() == [] and len(mgr.quarantine_dirs()) == 2
+
+    def test_empty_directory_is_loud(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(NoGoodCheckpoint, match="no checkpoints"):
+            mgr.restore_latest_good(_state())
+
+
+class TestCrashWindows:
+    def test_commit_crash_rolls_displaced_back(self, tmp_path, monkeypatch):
+        """A crash at the commit rename must not lose the OLD copy of the
+        step being overwritten — the except path renames it back."""
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+
+        def boom(tmp, step_dir):
+            raise OSError("simulated crash at commit")
+
+        monkeypatch.setattr(CheckpointManager, "_commit", staticmethod(boom))
+        with pytest.raises(OSError, match="simulated crash"):
+            mgr.save(1, {"params": {"w": jnp.zeros((3, 4)),
+                                    "b": jnp.zeros(4)},
+                         "step": jnp.int32(9)})
+        monkeypatch.undo()
+        # old copy intact, restorable, no litter
+        restored, _ = mgr.restore(1, _state())
+        assert int(restored["step"]) == 3
+        litter = [d for d in os.listdir(tmp_path) if d.startswith(".")]
+        assert litter == []
+
+    def test_hard_crash_between_renames_recovered_at_init(self, tmp_path):
+        """Simulate dying AFTER the old step was renamed aside but BEFORE
+        the new dir committed: a fresh manager restores the displaced copy."""
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        os.rename(tmp_path / "step_0000000001",
+                  tmp_path / ".displaced_step_0000000001_0")
+        mgr2 = CheckpointManager(str(tmp_path))
+        assert mgr2.all_steps() == [1]
+        restored, _ = mgr2.restore(1, _state())
+        assert int(restored["step"]) == 3
+
+    def test_orphaned_tmp_dirs_scrubbed_at_init(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        os.makedirs(tmp_path / ".tmp_ckpt_dead")
+        (tmp_path / ".tmp_ckpt_dead" / "host_0.npz").write_bytes(b"partial")
+        mgr2 = CheckpointManager(str(tmp_path))
+        assert not (tmp_path / ".tmp_ckpt_dead").exists()
+        assert mgr2.all_steps() == [1]
+
+    def test_all_steps_skips_quarantine_dirs(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        mgr.save(2, _state())
+        mgr.quarantine_step(2, reason="test")
+        assert mgr.all_steps() == [1]
+        assert mgr.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# program layer: GoldenRecord + runtime self-test (BIST)
+# ---------------------------------------------------------------------------
+
+class TestGolden:
+    def test_compile_records_golden(self, program):
+        g = program.golden
+        assert g is not None and g.seed == 0
+        # the probe is batch-1 regardless of the compiled batch
+        assert tuple(g.input_shape) == (1,) + tuple(program.input_shape[1:])
+        assert len(g.digests) >= 1
+        # full-M schedule is always recorded
+        assert g.digest_for(program.resolve_schedule(None)) is not None
+
+    def test_golden_json_roundtrip_exact(self, program):
+        from repro.deploy import GoldenRecord
+
+        g = program.golden
+        assert GoldenRecord.from_json(g.to_json()) == g
+        # equal records hash equal — aux-data equality is what keeps the
+        # jit cache warm across hot-reloads
+        assert hash(GoldenRecord.from_json(g.to_json())) == hash(g)
+
+    def test_golden_covers_ladder(self, program):
+        from repro.serve_cnn.slo import default_ladder
+
+        recorded = set(program.golden.schedules())
+        for rung in default_ladder(program):
+            assert program.resolve_schedule(rung) in recorded
+
+    def test_compile_golden_off_and_seeded(self):
+        # golden=False skips the record; golden=<int> changes the probe
+        from repro.core.binlinear import QuantConfig
+        from repro.models.cnn import LayerSpec, spec_binarize
+
+        specs = (LayerSpec("fc", "linear", pre="flatten", relu=False),)
+        params = {"fc": {"w": jax.random.normal(
+            jax.random.PRNGKey(0), (12, 4)) * 0.1}}
+        qc = QuantConfig(mode="binary", M=2, K_iters=4, interpret=True)
+        packed = spec_binarize(specs, params, qc)
+        off = deploy.compile(packed, specs, qc, (2, 2, 2, 3), golden=False)
+        assert off.golden is None
+        seeded = deploy.compile(packed, specs, qc, (2, 2, 2, 3), golden=7)
+        base = deploy.compile(packed, specs, qc, (2, 2, 2, 3))
+        assert seeded.golden.seed == 7 and base.golden.seed == 0
+        assert seeded.golden.digests != base.golden.digests
+
+    def test_self_test_passes_clean(self, program):
+        assert deploy.self_test(program) >= 1
+
+    def test_self_test_catches_memory_bitflip(self, program):
+        from repro.deploy import SelfTestFailure
+
+        bad = _injector().flip_bit_in_program(program)
+        with pytest.raises(SelfTestFailure) as ei:
+            deploy.self_test(bad)
+        assert ei.value.rung is not None
+        assert ei.value.expected != ei.value.actual
+
+    def test_golden_survives_save_load(self, program, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        deploy.save_program(mgr, 0, program)
+        like = dataclasses.replace(program, golden=None)
+        loaded = deploy.load_program(mgr, 0, like)
+        assert loaded.golden == program.golden
+        # identical treedef -> no jit retrace after a hot-reload
+        assert (jax.tree_util.tree_structure(loaded)
+                == jax.tree_util.tree_structure(program))
+        assert deploy.self_test(loaded) >= 1
+
+    def test_load_latest_good_skips_corrupt_program(self, program, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        deploy.save_program(mgr, 1, program)
+        deploy.save_program(mgr, 2, program)
+        _injector().flip_bit_on_disk(mgr._step_dir(2))
+        step, loaded = deploy.load_latest_good(
+            mgr, dataclasses.replace(program, golden=None))
+        assert step == 1
+        x = np.zeros(tuple(program.input_shape), np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(deploy.execute(loaded, x)),
+            np.asarray(deploy.execute(program, x)))
+
+
+# ---------------------------------------------------------------------------
+# service layer: watchdog + hot-reload, end to end under ManualClock
+# ---------------------------------------------------------------------------
+
+def _service(program, mgr, clock, *, selftest_every=2):
+    from repro.serve_cnn import CNNService, SLOConfig
+
+    return CNNService(
+        program,
+        slo=SLOConfig(target_ms=50.0, window=8, min_samples=4,
+                      recover_after=2),
+        batch_size=2, max_queue=8, clock=clock, sleep=clock.sleep,
+        selftest_every=selftest_every, checkpoint_manager=mgr,
+        restore_like=dataclasses.replace(program, golden=None))
+
+
+class TestServiceHotReload:
+    def test_watchdog_detects_and_hot_reloads(self, program, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        deploy.save_program(mgr, 0, program)
+        clock = ManualClock()
+        svc = _service(program, mgr, clock)
+        img = np.zeros(tuple(program.input_shape[1:]), np.float32)
+
+        def step():
+            clock.advance(0.002)
+            for _ in range(2):
+                svc.submit(img)
+            return svc.step()
+
+        for _ in range(3):  # clean phase: BIST runs, nothing trips
+            step()
+        assert svc.stats["selftest_runs"] >= 1
+        assert svc.stats["selftest_failures"] == 0
+
+        svc.program = _injector().flip_bit_in_program(svc.program)
+        done = []
+        for _ in range(4):
+            done.extend(step())
+        s = svc.stats
+        assert s["selftest_failures"] == 1 and s["reloads"] == 1
+        assert svc.last_reload_step == 0
+        assert svc.quarantined_program is not None
+        # recovered program serves bit-exact answers vs the clean executor
+        x = np.stack([img, img])
+        ref = np.asarray(deploy.execute(program, x))
+        np.testing.assert_array_equal(
+            np.asarray(deploy.execute(svc.program, x)), ref)
+        assert any(np.array_equal(np.asarray(r.logits), ref[0])
+                   for r in done if r.status == "done")
+
+    def test_watchdog_without_manager_reraises(self, program):
+        from repro.deploy import SelfTestFailure
+        from repro.serve_cnn import CNNService, SLOConfig
+
+        clock = ManualClock()
+        svc = CNNService(
+            program, slo=SLOConfig(target_ms=50.0),
+            batch_size=2, max_queue=8, clock=clock, sleep=clock.sleep,
+            selftest_every=1)
+        svc.program = _injector().flip_bit_in_program(svc.program)
+        svc.submit(np.zeros(tuple(program.input_shape[1:]), np.float32))
+        with pytest.raises(SelfTestFailure):
+            svc.step()
+        assert svc.stats["selftest_failures"] == 1
+        assert svc.stats["reloads"] == 0
+
+    def test_selftest_requires_golden(self, program):
+        from repro.serve_cnn import CNNService, SLOConfig
+
+        with pytest.raises(ValueError, match="GoldenRecord"):
+            CNNService(dataclasses.replace(program, golden=None),
+                       slo=SLOConfig(target_ms=50.0), selftest_every=2)
+
+
+# ---------------------------------------------------------------------------
+# fsck CLI
+# ---------------------------------------------------------------------------
+
+class TestFsckCLI:
+    def _main(self):
+        import tools.fsck_ckpt as fsck
+
+        return fsck.main
+
+    def test_clean_exit_0(self, tmp_path, capsys):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        assert self._main()([str(tmp_path)]) == 0
+        assert "CLEAN" in capsys.readouterr().out
+
+    def test_corrupt_exit_1_and_read_only(self, tmp_path, capsys):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, _state())
+        mgr.save(2, _state())
+        _injector().flip_bit_on_disk(mgr._step_dir(2))
+        report = tmp_path / "report.json"
+        assert self._main()([str(tmp_path), "--json", str(report)]) == 1
+        assert "CORRUPT" in capsys.readouterr().out
+        doc = json.loads(report.read_text())
+        assert doc["corrupt_steps"] == 1 and doc["total_steps"] == 2
+        # read-only: the corrupt step is still there, NOT quarantined
+        assert mgr.all_steps() == [1, 2] and mgr.quarantine_dirs() == []
+
+    def test_no_steps_exit_2(self, tmp_path):
+        assert self._main()([str(tmp_path / "empty")]) == 2

@@ -17,6 +17,7 @@ The claims under test (ISSUE 5 acceptance bar):
 MobileNet-B2 proper (224², width 1.0) runs in the slow tier; the fast tier
 covers the same code paths at reduced width/resolution.
 """
+import dataclasses
 import warnings
 
 import jax
@@ -224,8 +225,13 @@ class TestProgramStructure:
     def test_abstract_program_matches_concrete_structure(self, cnn_a):
         _, _, prog = cnn_a
         ab = deploy.abstract_program("cnn_a", QC, (3, 48, 48, 3))
+        # eval_shape cannot execute the golden probe, so abstract programs
+        # carry golden=None (load_program re-attaches the record from the
+        # checkpoint manifest); structure matches modulo that field
+        assert ab.golden is None and prog.golden is not None
         assert (jax.tree_util.tree_structure(ab)
-                == jax.tree_util.tree_structure(prog))
+                == jax.tree_util.tree_structure(
+                    dataclasses.replace(prog, golden=None)))
         assert ab.layer_stats() == prog.layer_stats()
         for got, want in zip(jax.tree_util.tree_leaves(ab),
                              jax.tree_util.tree_leaves(prog)):
@@ -280,7 +286,10 @@ class TestMobileNetB2:
                                     n_classes=1000)
         qc = QuantConfig(mode="binary", M=2, K_iters=1, interpret=True)
         bp = cnn.binarize_mobilenet(params, qc)
-        prog = deploy.compile(bp, "mobilenet", qc, (1, 224, 224, 3))
+        # golden=False: each golden rung is another minutes-scale 224²
+        # interpret execute, and this test never self-tests
+        prog = deploy.compile(bp, "mobilenet", qc, (1, 224, 224, 3),
+                              golden=False)
         # the early maps must be row-tiled (VMEM) and the 7² back half
         # batch-planned — the compile decisions the paper's §IV-E predicts
         stats = {s["name"]: s for s in prog.layer_stats()}

@@ -47,13 +47,15 @@ def test_executor_soak_rotating_schedules():
 
 
 def test_cnn_server_soak_faulty_traffic():
-    """Acceptance soak for the SLO-governed CNN service (ISSUE 8): under
+    """Acceptance soak for the SLO-governed CNN service (ISSUE 8 + 9): under
     cyclic fault storms (latency spikes + executor exceptions + NaN outputs
-    at seeded rates) every non-shed request finishes bit-exact vs the clean
+    at seeded rates, plus one disk and one in-memory bit flip per cycle)
+    every non-shed request finishes bit-exact vs the clean
     ``deploy.execute``, every injected fault reconciles against a disposition
-    counter (zero silently swallowed), the degradation histogram shows
-    reduced-M activity during pressure and full-M recovery after, and the
-    trend gauges stay flat."""
+    counter (zero silently swallowed), every bit flip is detected and healed
+    (quarantine + hot-reload), the degradation histogram shows reduced-M
+    activity during pressure and full-M recovery after, and the trend gauges
+    stay flat."""
     scen = sc.cnn_server_scenario()
     # 324 steps = 6 whole 54-step clean/storm/clean cycles; whole cycles
     # keep the (deliberately spiky) latency series trend-free
@@ -83,6 +85,15 @@ def test_cnn_server_soak_faulty_traffic():
     assert stats["shed"]["deadline_expired"] > 0, stats
     assert stats["shed"]["slo_shed"] > 0, stats
     assert stats["queue_depth"] <= 2 * 4, stats
+    # --- integrity storms (ISSUE 9): every in-memory flip caught by the
+    # golden self-test and healed by a hot-reload; every disk flip caught
+    # at restore and quarantined (renamed aside, never deleted) ---
+    assert inj["bitflip_mem"] > 0 and inj["bitflip_disk"] > 0, inj
+    assert stats["reloads"] == inj["bitflip_mem"], (stats, inj)
+    assert stats["quarantined_steps"] == inj["bitflip_disk"], (stats, inj)
+    assert p["ckpt_quarantined"] == inj["bitflip_disk"], (p, inj)
+    assert stats["selftest_failures"] == inj["bitflip_mem"], (stats, inj)
+    assert stats["selftest_runs"] > stats["selftest_failures"], stats
     # --- flat trends; gauges exactly flat (all rungs traced in cycle 1,
     # inside the 20% warmup window) ---
     result.assert_flat()

@@ -130,11 +130,18 @@ class TestCheckpointing:
         # no manifest.json inside
         assert mgr.latest_step() is None
 
-    def test_restore_with_dtype_cast(self, tmp_path):
+    def test_restore_dtype_mismatch_is_loud(self, tmp_path):
+        """A dtype mismatch between checkpoint and target is an error that
+        names the leaf and both dtypes — silent coercion once masked a
+        float leaf landing in a packed uint8 slot.  allow_cast=True makes
+        the conversion explicit for intentional precision changes."""
+        from repro.checkpoint.manager import LeafMismatch
         mgr = CheckpointManager(str(tmp_path))
         mgr.save(1, {"w": jnp.ones((3,), jnp.float32)})
         target = {"w": jnp.zeros((3,), jnp.bfloat16)}
-        restored, _ = mgr.restore(1, target)
+        with pytest.raises(LeafMismatch, match="'w'.*float32.*bfloat16"):
+            mgr.restore(1, target)
+        restored, _ = mgr.restore(1, target, allow_cast=True)
         assert restored["w"].dtype == jnp.bfloat16
 
 

@@ -56,6 +56,13 @@ METRIC_DIRECTIONS = {
     "p99_virtual_ms": "lower",
     "shed_fraction": "lower",
     "completed": "higher",
+    # cnn_recovery rows (watchdog + hot-reload path, benchmarks/serve_bench):
+    # detecting a seeded bit flip later, running the BIST more often per
+    # batch, or recovering to a non-bit-exact program is a regression
+    "reload_detect_batches": "lower",
+    "reload_detect_virtual_ms": "lower",
+    "selftest_per_100_batches": "lower",
+    "recovered_bit_exact": "higher",
     # program totals
     "max_vmem_bytes": "lower",
     # verify summaries

@@ -1,7 +1,8 @@
 """Nightly soak CLI: run long-lived-surface scenarios, assert flat trends.
 
     PYTHONPATH=src python tools/soak.py [server executor checkpoint ...]
-        [--steps N] [--csv-dir DIR] [--mobilenet-b2] [--list]
+        [--steps N] [--csv-dir DIR] [--ckpt-dir DIR] [--mobilenet-b2]
+        [--list]
 
 Each scenario (repro.testing.scenarios.SCENARIOS) wraps one long-lived
 serving surface — the launch server under mixed m_active/prefill traffic,
@@ -56,6 +57,10 @@ def main(argv=None) -> int:
                     help="override step count for every selected scenario")
     ap.add_argument("--csv-dir", default="", metavar="DIR",
                     help="write <scenario>_trend.csv files here")
+    ap.add_argument("--ckpt-dir", default="", metavar="DIR",
+                    help="checkpoint directory for the cnn_server scenario "
+                         "(default: a fresh tempdir); point tools/fsck_ckpt.py "
+                         "at it afterwards to audit the recovery path")
     ap.add_argument("--mobilenet-b2", action="store_true",
                     help="executor scenario uses full MobileNet-B2 @224^2 "
                          "(hardware only; minutes/call under interpret)")
@@ -89,6 +94,8 @@ def main(argv=None) -> int:
 
             tmp = tempfile.mkdtemp(prefix="soak_ckpt_")
             scen = sc.SCENARIOS[name](directory=tmp)
+        elif name == "cnn_server" and args.ckpt_dir:
+            scen = sc.SCENARIOS[name](directory=args.ckpt_dir)
         else:
             scen = sc.SCENARIOS[name]()
         result = run_soak(scen.step, steps=steps, name=name,

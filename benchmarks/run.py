@@ -31,10 +31,11 @@ import time
 import traceback
 
 # Version of the --json document layout.  Bump on any structural change to
-# the emitted sections (modules/structured row schemas, program, verify) —
-# tools/bench_diff.py refuses to compare documents whose schema differs, so
-# a layout change can never masquerade as a perf change.
-SCHEMA_VERSION = 1
+# the emitted sections (modules/structured row schemas, program, verify,
+# distributed) — tools/bench_diff.py refuses to compare documents whose
+# schema differs, so a layout change can never masquerade as a perf change.
+# v2: added the ``distributed`` section (per-mesh MeshPlan byte splits).
+SCHEMA_VERSION = 2
 
 MODULES = [
     ("table2", "benchmarks.table2_accuracy"),
@@ -65,6 +66,37 @@ def program_section() -> dict:
     for key, (arch, shape, kw) in PROGRAMS.items():
         prog = deploy.abstract_program(arch, qc, shape, **kw)
         out[key] = {"totals": prog.totals(), "layers": prog.layer_stats()}
+    return out
+
+
+# meshes the distributed section plans every program onto: pure data
+# parallelism and the data x model split (both 8 devices, so the per-device
+# numbers are directly comparable across rows)
+MESHES = {
+    "dp8": (8, 1),
+    "dp4_mp2": (4, 2),
+}
+
+
+def distributed_section() -> dict:
+    """Per-mesh MeshPlan accounting for every tracked program: how many
+    bytes of packed weights / VMEM working set / gather traffic one device
+    carries under ``plan_mesh`` (abstract compile — no weights, no devices).
+    ``tools/bench_diff.py`` gates these: a planner change that grows a
+    per-device working set, re-replicates previously sharded weights, or
+    inflates gather traffic is a regression."""
+    from repro import deploy, distributed
+    from repro.core.binlinear import QuantConfig
+
+    qc = QuantConfig(mode="binary", M=2, K_iters=1)
+    out = {}
+    for key, (arch, shape, kw) in PROGRAMS.items():
+        prog = deploy.abstract_program(arch, qc, shape, **kw)
+        out[key] = {
+            mesh: distributed.mesh_totals(
+                prog, distributed.plan_mesh(prog, n_data=nd, n_model=nm))
+            for mesh, (nd, nm) in MESHES.items()
+        }
     return out
 
 
@@ -172,6 +204,13 @@ def main() -> None:
             failed += 1
             doc["verify"] = {"error": f"{type(e).__name__}: {e}"}
             print(f"verify_section_FAILED,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        try:
+            doc["distributed"] = distributed_section()
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            doc["distributed"] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"distributed_section_FAILED,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)

@@ -15,9 +15,10 @@ set and gates CI; ``deploy.compile(..., verify=True)`` raises on ERRORs.
 from repro.analysis import mosaic_rules, trace_lint
 from repro.analysis.verify import (Finding, ProgramVerificationError,
                                    assert_verified, summarize,
-                                   verify_program)
+                                   verify_mesh_plan, verify_program)
 
 __all__ = [
     "Finding", "ProgramVerificationError", "assert_verified",
-    "mosaic_rules", "summarize", "trace_lint", "verify_program",
+    "mosaic_rules", "summarize", "trace_lint", "verify_mesh_plan",
+    "verify_program",
 ]

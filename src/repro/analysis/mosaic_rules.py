@@ -107,6 +107,23 @@ RULES: dict[str, Rule] = {r.id: r for r in [
          "batch not divisible by NB: the last program carries zero images"),
     Rule("mxu-occupancy", WARN,
          "under half the MXU's padded GEMM rows carry real work"),
+    # --- mesh shards (repro.distributed) ------------------------------------
+    Rule("shard-divisibility", ERROR,
+         "a bd-sharded layer's output channels must divide evenly over the "
+         "model axis (and the recorded d_local must be that quotient)"),
+    Rule("shard-lane", ERROR,
+         "a bd shard's device-local lane tile must be a multiple of 128 or "
+         "the full 8-padded per-device channel dim"),
+    Rule("shard-plan", ERROR,
+         "MeshPlan structure must match the program: one LayerShard per "
+         "instruction, bd only on ConvInstr, with a frozen device-local "
+         "plan (a None re-picks inside the sharded trace)"),
+    Rule("shard-accounting", WARN,
+         "LayerShard per-device weight bytes disagree with the stats "
+         "re-derived split (replicated copy vs weight_bytes / n_model)"),
+    Rule("shard-batch", WARN,
+         "global batch not divisible by the data axis: the last device "
+         "carries zero images every forward"),
     # --- trace lint ---------------------------------------------------------
     Rule("trace-fp-conv", ERROR,
          "full-binary trace contains fp conv_general_dilated primitives"),

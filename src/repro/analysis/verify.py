@@ -523,6 +523,111 @@ def verify_program(program: BinArrayProgram, *,
     return findings
 
 
+def verify_mesh_plan(program: BinArrayProgram, plan, *,
+                     vmem_budget: int | None = None) -> list[Finding]:
+    """Statically verify a :class:`~repro.distributed.plan.MeshPlan` against
+    its program: shard arity/kind structure (``shard-plan``), channel
+    divisibility over the model axis (``shard-divisibility``), Mosaic
+    lane-128 legality of each device-local bd tile (``shard-lane``),
+    per-device working sets against the VMEM budget (``vmem-budget``), and
+    the replication byte accounting (``shard-accounting``).  Returns all
+    findings, ERRORs first; empty list == clean.  Abstract-program safe —
+    shapes and static aux only, like :func:`verify_program`.
+    """
+    budget = vmem_budget or bck.DEFAULT_VMEM_BUDGET
+    fs: list[Finding] = []
+    if plan.n_data < 1 or plan.n_model < 1:
+        fs.append(make_finding(
+            "shard-plan", "", -1,
+            f"mesh axes must be >= 1, got n_data={plan.n_data}, "
+            f"n_model={plan.n_model}"))
+        return fs
+    if len(plan.shards) != len(program.instrs):
+        fs.append(make_finding(
+            "shard-plan", "", -1,
+            f"MeshPlan carries {len(plan.shards)} LayerShard(s) for "
+            f"{len(program.instrs)} instruction(s)"))
+        return fs
+    if plan.global_batch % plan.n_data:
+        fs.append(make_finding(
+            "shard-batch", "", -1,
+            f"global_batch={plan.global_batch} % n_data={plan.n_data} != 0: "
+            f"every forward pads {(-plan.global_batch) % plan.n_data} zero "
+            f"image(s)"))
+    for idx, (instr, s) in enumerate(zip(program.instrs, plan.shards)):
+        name = instr.name
+        if s.kind == "replicated":
+            if (s.per_device_weight_bytes
+                    and s.per_device_weight_bytes
+                    != instr.stats.weight_bytes):
+                fs.append(make_finding(
+                    "shard-accounting", name, idx,
+                    f"replicated shard records "
+                    f"{s.per_device_weight_bytes} B/device, stats say the "
+                    f"full copy is {instr.stats.weight_bytes} B"))
+            continue
+        if s.kind != "bd":
+            fs.append(make_finding(
+                "shard-plan", name, idx,
+                f"unknown shard kind {s.kind!r} (replicated | bd)"))
+            continue
+        if not isinstance(instr, ConvInstr):
+            fs.append(make_finding(
+                "shard-plan", name, idx,
+                f"bd sharding applies to ConvInstr only, got {instr.kind}"))
+            continue
+        D = int(instr.alpha.shape[-1])
+        if D % plan.n_model:
+            fs.append(make_finding(
+                "shard-divisibility", name, idx,
+                f"D={D} output channels do not divide over "
+                f"n_model={plan.n_model}"))
+            continue
+        d_local = D // plan.n_model
+        if s.d_local != d_local:
+            fs.append(make_finding(
+                "shard-divisibility", name, idx,
+                f"recorded d_local={s.d_local} != D/n_model = {d_local}"))
+        lp = s.plan
+        if lp is None or lp.nb is None or lp.bu is None or lp.bd is None:
+            fs.append(make_finding(
+                "shard-plan", name, idx,
+                f"bd shard needs a frozen device-local (nb, bu, bd) plan, "
+                f"got {lp}"))
+            continue
+        d_pad = -(-d_local // 8) * 8
+        if lp.bd % mosaic_rules.LANE and lp.bd != d_pad:
+            fs.append(make_finding(
+                "shard-lane", name, idx,
+                f"device-local bd={lp.bd} is neither a multiple of "
+                f"{mosaic_rules.LANE} nor the full 8-padded per-device "
+                f"channel dim {d_pad} (d_local={d_local})"))
+        st = instr.stats
+        Hp, Wp = (tuple(st.padded_in) if st.padded_in
+                  else tuple(st.in_shape[1:3]))
+        C = int(st.in_shape[-1])
+        local_vmem = bck.tile_vmem_bytes(
+            Wp, C, instr.kh, instr.kw, min(lp.bd, d_pad),
+            bu=lp.bu, pool=instr.pool, stride=instr.stride, m=instr.M,
+            nb=lp.nb)
+        if local_vmem > budget and not (lp.nb == 1 and lp.bu == 1):
+            fs.append(make_finding(
+                "vmem-budget", name, idx,
+                f"device-local working set {local_vmem} B > budget "
+                f"{budget} B (nb={lp.nb}, bu={lp.bu}, bd={lp.bd}, "
+                f"d_local={d_local})"))
+        if (s.per_device_weight_bytes
+                and s.per_device_weight_bytes
+                != st.weight_bytes // plan.n_model):
+            fs.append(make_finding(
+                "shard-accounting", name, idx,
+                f"bd shard records {s.per_device_weight_bytes} B/device, "
+                f"stats split gives {st.weight_bytes // plan.n_model} B "
+                f"(weight_bytes={st.weight_bytes}, n_model={plan.n_model})"))
+    fs.sort(key=lambda f: (f.severity != mosaic_rules.ERROR, f.index))
+    return fs
+
+
 def assert_verified(program: BinArrayProgram, *,
                     vmem_budget: int | None = None) -> list[Finding]:
     """Raise :class:`ProgramVerificationError` on any ERROR finding; returns

@@ -148,16 +148,36 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
 
+    def _manifest_name(self) -> str:
+        """Single-host steps keep the historical ``manifest.json``; with
+        ``n_hosts > 1`` each host owns ``manifest_host_<id>.json`` so hosts
+        never write the same file."""
+        if self.n_hosts <= 1:
+            return "manifest.json"
+        return f"manifest_host_{self.host_id}.json"
+
     # ------------------------------------------------------------- save ---
     def save(self, step: int, state: dict, *, extra: dict | None = None):
-        """state: pytree of arrays.  extra: JSON-able (data pipeline etc.)."""
+        """state: pytree of arrays.  extra: JSON-able (data pipeline etc.).
+
+        Single-host saves commit the whole step dir with the
+        rename-aside/rename-in protocol below.  Multi-host saves
+        (``n_hosts > 1``) can't: the step dir is SHARED — each host instead
+        stages its ``host_<id>.npz`` + ``manifest_host_<id>.json`` in a temp
+        dir and merge-commits them with per-file atomic ``os.replace`` into
+        the (possibly pre-existing) step dir, so concurrent hosts never
+        displace each other's files and a crash leaves every other host's
+        files intact.
+        """
         flat, _ = _flatten_with_paths(state)
         step_dir = self._step_dir(step)
         tmp = tempfile.mkdtemp(dir=self.dir, prefix=_TMP_PREFIX)
         displaced = None
         try:
             arrays = {}
-            meta = {"step": step, "extra": extra or {}, "leaves": {}}
+            meta = {"step": step, "host_id": self.host_id,
+                    "n_hosts": self.n_hosts, "extra": extra or {},
+                    "leaves": {}}
             for key, leaf in flat.items():
                 host = np.asarray(jax.device_get(leaf))
                 # ascontiguousarray promotes 0-d to (1,); keep scalar shapes
@@ -168,17 +188,26 @@ class CheckpointManager:
                     "crc32": crc32_hex(arr.tobytes())}
             meta["manifest_crc32"] = _manifest_digest(meta)
             np.savez(os.path.join(tmp, f"host_{self.host_id}.npz"), **arrays)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            with open(os.path.join(tmp, self._manifest_name()), "w") as f:
                 json.dump(meta, f)
                 f.flush()
                 os.fsync(f.fileno())
-            # Overwrite protocol: the old step is renamed aside (intact)
-            # before the new dir is committed, so a crash between the two
-            # renames loses nothing — __init__ recovers the displaced copy.
-            if os.path.exists(step_dir):
-                displaced = self._displaced_name(step_dir)
-                os.rename(step_dir, displaced)
-            self._commit(tmp, step_dir)  # commit point
+            if self.n_hosts > 1:
+                # merge commit: per-file atomic replace into the shared dir
+                os.makedirs(step_dir, exist_ok=True)
+                for name in sorted(os.listdir(tmp)):
+                    os.replace(os.path.join(tmp, name),
+                               os.path.join(step_dir, name))
+                shutil.rmtree(tmp, ignore_errors=True)
+            else:
+                # Overwrite protocol: the old step is renamed aside (intact)
+                # before the new dir is committed, so a crash between the
+                # two renames loses nothing — __init__ recovers the
+                # displaced copy.
+                if os.path.exists(step_dir):
+                    displaced = self._displaced_name(step_dir)
+                    os.rename(step_dir, displaced)
+                self._commit(tmp, step_dir)  # commit point
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             if displaced is not None and not os.path.exists(step_dir):
@@ -188,7 +217,8 @@ class CheckpointManager:
             raise
         if displaced is not None:
             shutil.rmtree(displaced, ignore_errors=True)
-        self._gc()
+        if self.host_id == 0:
+            self._gc()   # one host gc's; racing deletes corrupt live saves
         return step_dir
 
     def _displaced_name(self, step_dir: str) -> str:
@@ -213,11 +243,17 @@ class CheckpointManager:
     # ---------------------------------------------------------- restore ---
     def all_steps(self) -> list[int]:
         """Committed steps, ascending.  Quarantined dirs are skipped (their
-        names start with ``quarantine_``, not ``step_``)."""
+        names start with ``quarantine_``, not ``step_``).  A step counts as
+        committed when any host's manifest landed (``manifest.json`` or
+        ``manifest_host_<id>.json``)."""
         out = []
         for d in os.listdir(self.dir):
-            if d.startswith("step_") and os.path.exists(
-                    os.path.join(self.dir, d, "manifest.json")):
+            if not d.startswith("step_"):
+                continue
+            path = os.path.join(self.dir, d)
+            if os.path.exists(os.path.join(path, "manifest.json")) or any(
+                    n.startswith("manifest_host_") and n.endswith(".json")
+                    for n in os.listdir(path)):
                 out.append(int(d[5:]))
         return sorted(out)
 
@@ -233,11 +269,14 @@ class CheckpointManager:
         ``crc32``/``manifest_crc32`` fields) are tolerated.
         """
         step_dir = self._step_dir(step)
-        manifest = os.path.join(step_dir, "manifest.json")
+        manifest = os.path.join(step_dir, self._manifest_name())
+        if not os.path.exists(manifest) and self.n_hosts > 1:
+            # a step saved single-host, restored under a multi-host manager
+            manifest = os.path.join(step_dir, "manifest.json")
         if not os.path.exists(manifest):
             raise CheckpointCorruption(
-                f"step {step}: manifest.json missing under {step_dir}",
-                step=step)
+                f"step {step}: {os.path.basename(manifest)} missing under "
+                f"{step_dir}", step=step)
         try:
             with open(manifest) as f:
                 meta = json.load(f)
@@ -298,6 +337,86 @@ class CheckpointManager:
         except CheckpointCorruption as e:
             return [str(e)]
         return []
+
+    def cross_host_digests(self, step: int) -> dict:
+        """All-gather-style digest exchange over one step's host files.
+
+        Every host's manifest + npz under the shared step dir is re-read
+        and re-hashed (the filesystem walk stands in for the collective —
+        each entry is exactly what host ``h`` would contribute to an
+        all-gather of its per-leaf CRC32 digests).  Returns a report:
+
+          * ``hosts``      — ``host_id -> {"problems": [...], "leaves":
+            {key: crc32}}``; ``problems`` holds that host's local
+            verification failures (manifest digest, missing npz, leaf
+            digest/shape drift);
+          * ``mismatches`` — leaves recorded by more than one host whose
+            digests disagree (replicated state must hash identically on
+            every host; a split here means the replicas diverged);
+          * ``ok``         — no problems and no mismatches.
+        """
+        step_dir = self._step_dir(step)
+        if not os.path.isdir(step_dir):
+            raise CheckpointCorruption(
+                f"step {step}: no step dir under {self.dir}", step=step)
+        manifests: dict[int, str] = {}
+        for name in sorted(os.listdir(step_dir)):
+            if name == "manifest.json":
+                manifests[0] = os.path.join(step_dir, name)
+            elif name.startswith("manifest_host_") and name.endswith(".json"):
+                manifests[int(name[len("manifest_host_"):-len(".json")])] = \
+                    os.path.join(step_dir, name)
+        report: dict = {"step": step, "hosts": {}, "mismatches": [],
+                        "ok": bool(manifests)}
+        by_leaf: dict[str, dict[int, str]] = {}
+        for host, mpath in sorted(manifests.items()):
+            problems: list[str] = []
+            leaves: dict[str, str] = {}
+            try:
+                with open(mpath) as f:
+                    meta = json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                report["hosts"][host] = {
+                    "problems": [f"unreadable manifest: {e}"], "leaves": {}}
+                report["ok"] = False
+                continue
+            recorded = meta.get("manifest_crc32")
+            if recorded is not None and _manifest_digest(meta) != recorded:
+                problems.append(
+                    f"manifest digest {_manifest_digest(meta)} != recorded "
+                    f"{recorded}")
+            npz = os.path.join(step_dir, f"host_{host}.npz")
+            data: dict[str, np.ndarray] = {}
+            if not os.path.exists(npz):
+                problems.append(f"host_{host}.npz missing")
+            else:
+                try:
+                    with np.load(npz) as z:
+                        data = {k: z[k] for k in z.files}
+                except (OSError, ValueError, zipfile.BadZipFile) as e:
+                    problems.append(f"unreadable host_{host}.npz: {e}")
+            for key, info in meta.get("leaves", {}).items():
+                nkey = key.replace("/", "__")
+                if nkey not in data:
+                    if data:
+                        problems.append(f"leaf {key!r} absent from npz")
+                    continue
+                got = crc32_hex(np.ascontiguousarray(data[nkey]).tobytes())
+                leaves[key] = got
+                want = info.get("crc32")
+                if want is not None and got != want:
+                    problems.append(
+                        f"leaf {key!r} digest {got} != recorded {want}")
+                by_leaf.setdefault(key, {})[host] = got
+            report["hosts"][host] = {"problems": problems, "leaves": leaves}
+            if problems:
+                report["ok"] = False
+        for key, per_host in sorted(by_leaf.items()):
+            if len(per_host) > 1 and len(set(per_host.values())) > 1:
+                report["mismatches"].append(
+                    {"leaf": key, "digests": dict(sorted(per_host.items()))})
+                report["ok"] = False
+        return report
 
     def restore(self, step: int, target: dict, *, shardings=None,
                 allow_cast: bool = False, verify: bool = True):

@@ -33,6 +33,10 @@ class QuantConfig:
     K_iters: int = 8                # Alg-2 refinement budget inside jit
     group_size: int | None = None   # None = per-output-channel (paper)
     m_active: int | None = None     # runtime levels used (<= M); None = all
+    m_schedule: tuple[int, ...] | None = None  # per-layer §IV-D schedule:
+                                    # entry i is m_active for decoder layer i
+                                    # (models.common.layer_quant_cfg resolves
+                                    # it; forces unrolled layer walks)
     use_pallas: bool = False        # route binary mode through Pallas kernel
     interpret: bool = False         # Pallas interpret mode (CPU validation)
     fuse_conv: bool = False         # binary convs: fused implicit-GEMM kernel

@@ -70,6 +70,20 @@ class LayerStats:
     mxu_row_occupancy: float = 1.0  # GEMM rows / padded MXU rows (convs)
     batch_row_utilization: float = 1.0  # whole-batch row utilization
 
+    def device_view(self, *, n_model: int = 1, sharded: bool = False) -> dict:
+        """Per-device byte split of this layer under a mesh: an output-
+        channel (bd) shard divides the packed weight stream and its HBM
+        traffic evenly over the ``n_model`` axis (channel slices are
+        independent); a replicated layer carries the full copy on every
+        device.  VMEM for sharded layers depends on the device-local tile
+        plan, so ``repro.distributed.stats`` recomputes it from the kernel
+        formula instead of splitting this estimate."""
+        share = n_model if sharded else 1
+        return {
+            "per_device_weight_bytes": self.weight_bytes // share,
+            "per_device_hbm_fused_bytes": self.hbm_fused_bytes // share,
+        }
+
 
 def _register(cls, array_fields: tuple[str, ...]) -> None:
     """Register a dataclass as a pytree: ``array_fields`` are children, every

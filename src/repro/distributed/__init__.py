@@ -1,0 +1,23 @@
+"""Multi-device BinArrayProgram execution (paper §IV scaled to a mesh).
+
+``plan_mesh`` freezes a :class:`MeshPlan` (data-parallel batch + optional
+output-channel model parallelism per layer), ``execute_sharded`` runs one
+jitted ``shard_map`` forward bit-exact against ``deploy.execute``, and
+``shard_layer_stats``/``mesh_totals`` account the per-device byte splits
+the benchmarks gate.  See docs/distributed.md.
+"""
+from repro.distributed.executor import (cache_gauges, cache_stats,
+                                        execute_sharded,
+                                        reset_trace_entry_count,
+                                        trace_entry_count)
+from repro.distributed.plan import (DATA_AXIS, DEFAULT_MIN_SHARD_BYTES,
+                                    MODEL_AXIS, LayerShard, MeshPlan,
+                                    plan_mesh)
+from repro.distributed.stats import mesh_totals, shard_layer_stats
+
+__all__ = [
+    "DATA_AXIS", "DEFAULT_MIN_SHARD_BYTES", "MODEL_AXIS",
+    "LayerShard", "MeshPlan", "plan_mesh",
+    "execute_sharded", "trace_entry_count", "reset_trace_entry_count",
+    "cache_stats", "cache_gauges", "shard_layer_stats", "mesh_totals",
+]

@@ -1,0 +1,100 @@
+"""Per-device accounting of a program under a MeshPlan.
+
+Grows the compiler's :class:`~repro.deploy.program.LayerStats` with the
+mesh dimension: how many bytes of packed weights, VMEM working set, and
+gather traffic each *device* carries, split into replicated vs sharded.
+``pick_tile`` co-plans with the mesh through ``plan_mesh`` (the device-local
+plans are picked at the per-device batch); these numbers are what
+``benchmarks/run.py --json``'s ``distributed`` section reports and
+``tools/bench_diff.py`` gates — replication overhead creeping up or a
+per-device working set growing past a baseline is a regression.
+
+Everything reads shapes and static aux only (abstract-program safe).
+"""
+from __future__ import annotations
+
+from repro.deploy.program import BinArrayProgram
+from repro.distributed.plan import MeshPlan
+from repro.kernels import binary_conv as bck
+
+
+def shard_layer_stats(program: BinArrayProgram,
+                      plan: MeshPlan) -> list[dict]:
+    """One JSON-able dict per instruction: its placement and per-device byte
+    split under ``plan``.  ``gather_bytes`` is the fp32 output traffic one
+    device *receives* per forward from the bd all_gather (0 for replicated
+    layers — they communicate nothing)."""
+    if len(plan.shards) != len(program.instrs):
+        raise ValueError(
+            f"MeshPlan carries {len(plan.shards)} shard(s) for "
+            f"{len(program.instrs)} instruction(s)")
+    out = []
+    for idx, (instr, s) in enumerate(zip(program.instrs, plan.shards)):
+        st = instr.stats
+        row = {
+            "index": idx, "name": instr.name, "kind": instr.kind,
+            "shard": s.kind,
+            "devices": plan.devices,
+            "weight_bytes": int(st.weight_bytes),
+        }
+        row.update(st.device_view(n_model=plan.n_model,
+                                  sharded=s.kind == "bd"))
+        if s.kind == "bd":
+            Hp, Wp = (tuple(st.padded_in) if st.padded_in
+                      else tuple(st.in_shape[1:3]))
+            C = int(st.in_shape[-1])
+            row["d_local"] = s.d_local
+            row["local_plan"] = {"nb": s.plan.nb, "bu": s.plan.bu,
+                                 "bd": s.plan.bd}
+            # the device-local working set under the local plan (the number
+            # the verifier's vmem-budget rule sees per device)
+            row["per_device_vmem_bytes"] = int(bck.tile_vmem_bytes(
+                Wp, C, instr.kh, instr.kw, s.plan.bd, bu=s.plan.bu,
+                pool=instr.pool, stride=instr.stride, m=instr.M,
+                nb=s.plan.nb))
+            # fp32 output rows received from the other model-column peers
+            out_img = 1
+            for d in st.out_shape[1:]:
+                out_img *= int(d)
+            recv = (out_img * plan.local_batch * 4
+                    * (plan.n_model - 1)) // max(plan.n_model, 1)
+            row["gather_bytes"] = int(recv)
+        else:
+            row["per_device_vmem_bytes"] = int(st.vmem_bytes)
+            row["gather_bytes"] = 0
+        out.append(row)
+    return out
+
+
+def mesh_totals(program: BinArrayProgram, plan: MeshPlan) -> dict:
+    """Whole-program roll-up of :func:`shard_layer_stats` — the
+    ``distributed`` section's gated totals.
+
+    ``replication_overhead`` is fleet weight bytes (every copy on every
+    device) divided by one program copy: ``devices`` when everything is
+    replicated, shrinking toward ``n_data`` as layers shard.
+    """
+    rows = shard_layer_stats(program, plan)
+    single = sum(r["weight_bytes"] for r in rows)
+    fleet = 0
+    for r in rows:
+        copies = plan.n_data if r["shard"] == "bd" else plan.devices
+        fleet += r["weight_bytes"] * copies
+    return {
+        "devices_per_forward": plan.devices,
+        "n_data": plan.n_data,
+        "n_model": plan.n_model,
+        "global_batch": plan.global_batch,
+        "local_batch": plan.local_batch,
+        "sharded_layers": sum(1 for r in rows if r["shard"] == "bd"),
+        "per_device_weight_bytes": int(sum(
+            r["per_device_weight_bytes"] for r in rows)),
+        "replicated_weight_bytes": int(sum(
+            r["weight_bytes"] for r in rows if r["shard"] != "bd")),
+        "sharded_weight_bytes": int(sum(
+            r["weight_bytes"] for r in rows if r["shard"] == "bd")),
+        "max_per_device_vmem_bytes": int(max(
+            r["per_device_vmem_bytes"] for r in rows)),
+        "gather_bytes": int(sum(r["gather_bytes"] for r in rows)),
+        "replication_overhead": (fleet / single) if single else 0.0,
+    }

@@ -69,7 +69,10 @@ from repro.models import api
 class Request:
     prompt: np.ndarray            # [S] int32
     max_new_tokens: int = 16
-    m_active: int | None = None   # paper §IV-D runtime mode (None = all levels)
+    m_active: int | tuple | list | None = None
+    #   paper §IV-D runtime mode: None = all levels, int = uniform level
+    #   count, sequence = per-decoder-layer schedule (entry i applies to
+    #   layer i, last entry extends; same shape deploy.execute takes)
     deadline_s: float | None = None  # absolute time.monotonic() deadline;
     #                                  expired-on-arrival requests are shed
     #                                  at admit (same contract as serve_cnn)
@@ -132,8 +135,8 @@ class Server:
         # one jitted decode per distinct m_active (§IV-D: the level count is
         # static — it sets how many unrolled level matmuls the step runs);
         # ditto for the prefill pass, which runs the same binary linears
-        self._decode_fns: dict[int | None, Callable] = {}
-        self._prefill_fns: dict[int | None, Callable] = {}
+        self._decode_fns: dict[int | tuple | None, Callable] = {}
+        self._prefill_fns: dict[int | tuple | None, Callable] = {}
         self._scatter_fn = jax.jit(functools.partial(api.scatter_cache, cfg))
         self._prefill_lens_seen: set[tuple[int | None, int]] = set()
         self.stats = {"bulk_prefills": 0, "tokenwise_prefill_steps": 0,
@@ -183,37 +186,54 @@ class Server:
             b = next((x for x in self.prefill_buckets if x >= L), L)
         return max(min(b, self.max_len - 1), L)
 
-    def _norm_m(self, m_active: int | None) -> int | None:
+    def _norm_m(self, m_active) -> int | tuple | None:
         """Canonical per-request level count: clamp to [1, M] (a request
         asking for more levels than the buffers hold serves full-accuracy),
         and collapse an explicit request for the server's default count onto
         the ``None`` key — same computation, one shared jitted decode and
-        one shared batch group per step."""
+        one shared batch group per step.  A per-layer schedule normalizes
+        to a clamped tuple; a uniform tuple collapses onto its single level
+        (so ``(2, 2)`` and ``2`` share one compiled variant and one batch
+        group)."""
         if m_active is None:
             return None
-        m_active = max(1, min(m_active, self.cfg.quant.M))
+        if isinstance(m_active, (tuple, list)):
+            sched = tuple(max(1, min(int(m), self.cfg.quant.M))
+                          for m in m_active)
+            if len(set(sched)) > 1:
+                return sched
+            m_active = sched[0]     # uniform schedule == one level count
+        m_active = max(1, min(int(m_active), self.cfg.quant.M))
         default = self.cfg.quant.m_active or self.cfg.quant.M
         return None if m_active == default else m_active
 
-    def _decode_for(self, m_active: int | None) -> Callable:
+    def _cfg_for(self, m_active: int | tuple | None) -> ArchConfig:
+        """Specialize the arch config to a normalized §IV-D mode: an int
+        sets the uniform level count, a tuple installs the per-layer
+        schedule (``quant.m_schedule``, resolved by the layer walks)."""
+        if m_active is None:
+            return self.cfg
+        if isinstance(m_active, tuple):
+            return self.cfg.replace(quant=self.cfg.quant.replace(
+                m_active=None, m_schedule=m_active))
+        return self.cfg.replace(
+            quant=self.cfg.quant.replace(m_active=m_active))
+
+    def _decode_for(self, m_active) -> Callable:
         m_active = self._norm_m(m_active)
         fn = self._decode_fns.get(m_active)
         if fn is None:
-            cfg = self.cfg
-            if m_active is not None:
-                cfg = cfg.replace(quant=cfg.quant.replace(m_active=m_active))
-            fn = jax.jit(functools.partial(api.decode_step, cfg))
+            fn = jax.jit(functools.partial(api.decode_step,
+                                           self._cfg_for(m_active)))
             self._decode_fns[m_active] = fn
         return fn
 
-    def _prefill_for(self, m_active: int | None) -> Callable:
+    def _prefill_for(self, m_active) -> Callable:
         m_active = self._norm_m(m_active)
         fn = self._prefill_fns.get(m_active)
         if fn is None:
-            cfg = self.cfg
-            if m_active is not None:
-                cfg = cfg.replace(quant=cfg.quant.replace(m_active=m_active))
-            fn = jax.jit(functools.partial(api.prefill, cfg,
+            fn = jax.jit(functools.partial(api.prefill,
+                                           self._cfg_for(m_active),
                                            max_len=self.max_len))
             self._prefill_fns[m_active] = fn
         return fn
@@ -236,10 +256,13 @@ class Server:
         if req.deadline_s is not None and req.deadline_s <= time.monotonic():
             self.stats["shed_count"] += 1
             return False
-        if req.m_active is not None and int(req.m_active) < 1:
-            raise ValueError(
-                f"Request.m_active must be >= 1 (got {req.m_active}); use "
-                "None to serve all packed levels")
+        if req.m_active is not None:
+            ms = (req.m_active if isinstance(req.m_active, (tuple, list))
+                  else [req.m_active])
+            if len(ms) == 0 or any(int(m) < 1 for m in ms):
+                raise ValueError(
+                    f"Request.m_active entries must be >= 1 (got "
+                    f"{req.m_active}); use None to serve all packed levels")
         n_prompt = int(np.asarray(req.prompt).size)
         if n_prompt < 1:
             raise ValueError("Request.prompt must hold at least one token")

@@ -55,19 +55,25 @@ def _init_ssm_lm(key, cfg: ArchConfig):
 
 def _ssm_hidden(params, cfg: ArchConfig, tokens):
     x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
+    # a per-layer §IV-D schedule forces the unrolled walk (scan needs a
+    # layer-uniform body); same contract as transformer._run_stack
+    per_layer = cfg.quant.m_schedule is not None
 
-    def body(carry, layer):
-        h = cm.rms_norm(layer["norm"], carry, cfg.norm_eps)
-        return carry + ssm_mod.mamba2_forward(layer["block"], h, cfg), None
+    def make_body(cfg_i):
+        def body(carry, layer):
+            h = cm.rms_norm(layer["norm"], carry, cfg_i.norm_eps)
+            return carry + ssm_mod.mamba2_forward(layer["block"], h, cfg_i), None
 
-    if cfg.remat:
-        body = jax.checkpoint(body, prevent_cse=False)
-    if cfg.scan_layers:
-        x, _ = jax.lax.scan(body, x, params["mamba_layers"])
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        return body
+
+    if cfg.scan_layers and not per_layer:
+        x, _ = jax.lax.scan(make_body(cfg), x, params["mamba_layers"])
     else:
-        n = cfg.n_layers
-        for i in range(n):
-            x, _ = body(x, jax.tree.map(lambda t: t[i], params["mamba_layers"]))
+        for i in range(cfg.n_layers):
+            x, _ = make_body(cm.layer_quant_cfg(cfg, i))(
+                x, jax.tree.map(lambda t: t[i], params["mamba_layers"]))
     return cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
 
 
@@ -190,21 +196,23 @@ def decode_step(cfg: ArchConfig, params, batch):
 def _ssm_decode(params, cfg: ArchConfig, tokens, cache, update_mask=None):
     x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
 
-    def body(carry, inp):
+    per_layer = cfg.quant.m_schedule is not None
+
+    def body(carry, inp, cfg_i=cfg):
         layer, lc = inp
-        h = cm.rms_norm(layer["norm"], carry, cfg.norm_eps)
-        d, nc = ssm_mod.mamba2_decode(layer["block"], h, cfg, lc,
+        h = cm.rms_norm(layer["norm"], carry, cfg_i.norm_eps)
+        d, nc = ssm_mod.mamba2_decode(layer["block"], h, cfg_i, lc,
                                       update_mask=update_mask)
         return carry + d, nc
 
-    if cfg.scan_layers:
+    if cfg.scan_layers and not per_layer:
         x, new_cache = jax.lax.scan(body, x, (params["mamba_layers"], cache))
     else:
         outs = []
         for i in range(cfg.n_layers):
             layer = jax.tree.map(lambda t: t[i], params["mamba_layers"])
             lc = jax.tree.map(lambda t: t[i], cache)
-            x, nc = body(x, (layer, lc))
+            x, nc = body(x, (layer, lc), cfg_i=cm.layer_quant_cfg(cfg, i))
             outs.append(nc)
         new_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
     x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
@@ -244,18 +252,20 @@ def prefill(cfg: ArchConfig, params, tokens, *, max_len: int):
 def _ssm_prefill(params, cfg: ArchConfig, tokens):
     x = cm.embed(params["embed"], tokens).astype(cfg.jnp_dtype)
 
-    def body(carry, layer):
-        h = cm.rms_norm(layer["norm"], carry, cfg.norm_eps)
-        d, c = ssm_mod.mamba2_prefill(layer["block"], h, cfg)
+    per_layer = cfg.quant.m_schedule is not None
+
+    def body(carry, layer, cfg_i=cfg):
+        h = cm.rms_norm(layer["norm"], carry, cfg_i.norm_eps)
+        d, c = ssm_mod.mamba2_prefill(layer["block"], h, cfg_i)
         return carry + d, c
 
-    if cfg.scan_layers:
+    if cfg.scan_layers and not per_layer:
         x, caches = jax.lax.scan(body, x, params["mamba_layers"])
     else:
         outs = []
         for i in range(cfg.n_layers):
             layer = jax.tree.map(lambda t: t[i], params["mamba_layers"])
-            x, c = body(x, layer)
+            x, c = body(x, layer, cfg_i=cm.layer_quant_cfg(cfg, i))
             outs.append(c)
         caches = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
     x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)

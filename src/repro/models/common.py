@@ -124,6 +124,23 @@ def linear(params, x: jax.Array, quant: bl.QuantConfig = bl.DENSE) -> jax.Array:
     return bl.apply_linear(params, x, quant)
 
 
+def layer_quant_cfg(cfg, idx: int):
+    """Resolve a per-layer §IV-D quant schedule for decoder layer ``idx``.
+
+    With ``cfg.quant.m_schedule`` set, returns ``cfg`` specialized to that
+    layer's level count (entry ``idx``, last entry extended if the schedule
+    is short); otherwise returns ``cfg`` unchanged.  ``idx`` counts global
+    decoder layers — leading dense layers first, then the main stack — the
+    same order ``deploy``'s per-instruction schedules use for CNNs.
+    """
+    sched = cfg.quant.m_schedule
+    if sched is None:
+        return cfg
+    m = sched[idx] if idx < len(sched) else sched[-1]
+    return cfg.replace(
+        quant=cfg.quant.replace(m_active=int(m), m_schedule=None))
+
+
 def init_embedding(key, vocab: int, dim: int, dtype):
     return {"table": (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)}
 

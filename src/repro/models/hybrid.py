@@ -63,28 +63,35 @@ def hybrid_hidden(params, cfg: ArchConfig, tokens):
     mask = cm.causal_mask(S, cfg.sliding_window)
     every = cfg.hybrid_attn_every
 
-    def body(carry, inp):
-        i, layer = inp
-        h = cm.rms_norm(layer["norm"], carry, cfg.norm_eps)
-        carry = carry + ssm_mod.mamba2_forward(layer["block"], h, cfg)
-        carry = jax.lax.cond(
-            (i + 1) % every == 0,
-            lambda c: _shared_block(params["shared"], c, x0, cfg,
-                                    positions=positions, mask=mask),
-            lambda c: c,
-            carry,
-        )
-        return carry, None
+    # per-layer §IV-D schedules force the unrolled walk, like transformer
+    per_layer = cfg.quant.m_schedule is not None
 
-    if cfg.remat:
-        body = jax.checkpoint(body, prevent_cse=False)
+    def make_body(cfg_i):
+        def body(carry, inp):
+            i, layer = inp
+            h = cm.rms_norm(layer["norm"], carry, cfg_i.norm_eps)
+            carry = carry + ssm_mod.mamba2_forward(layer["block"], h, cfg_i)
+            carry = jax.lax.cond(
+                (i + 1) % every == 0,
+                lambda c: _shared_block(params["shared"], c, x0, cfg_i,
+                                        positions=positions, mask=mask),
+                lambda c: c,
+                carry,
+            )
+            return carry, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        return body
+
     idx = jnp.arange(cfg.n_layers)
-    if cfg.scan_layers:
-        x, _ = jax.lax.scan(body, x, (idx, params["mamba_layers"]))
+    if cfg.scan_layers and not per_layer:
+        x, _ = jax.lax.scan(make_body(cfg), x, (idx, params["mamba_layers"]))
     else:
         for i in range(cfg.n_layers):
-            x, _ = body(x, (jnp.int32(i),
-                            jax.tree.map(lambda t: t[i], params["mamba_layers"])))
+            x, _ = make_body(cm.layer_quant_cfg(cfg, i))(
+                x, (jnp.int32(i),
+                    jax.tree.map(lambda t: t[i], params["mamba_layers"])))
     return cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
 
 
@@ -146,17 +153,19 @@ def hybrid_decode_step(params, cfg: ArchConfig, tokens, pos, cache,
     # unrolled decode over layers (cond-in-scan with per-point cache indexing
     # is messier than the win; n_layers is static)
     for i in range(cfg.n_layers):
+        cfg_i = cm.layer_quant_cfg(cfg, i)
         layer = jax.tree.map(lambda t: t[i], params["mamba_layers"])
         mcache = jax.tree.map(lambda t: t[i], cache["mamba"])
-        h = cm.rms_norm(layer["norm"], x, cfg.norm_eps)
-        d, nm = ssm_mod.mamba2_decode(layer["block"], h, cfg, mcache,
+        h = cm.rms_norm(layer["norm"], x, cfg_i.norm_eps)
+        d, nm = ssm_mod.mamba2_decode(layer["block"], h, cfg_i, mcache,
                                       update_mask=update_mask)
         x = x + d
         new_mamba.append(nm)
         if (i + 1) % every == 0 and (i + 1) // every <= n_pts:
             p_idx = (i + 1) // every - 1
             acache = jax.tree.map(lambda t: t[p_idx], attn_cache)
-            x, na = _shared_block_decode(params["shared"], x, x0, cfg, acache, pos)
+            x, na = _shared_block_decode(params["shared"], x, x0, cfg_i,
+                                         acache, pos)
             attn_cache = jax.tree.map(
                 lambda full, new: full.at[p_idx].set(new), attn_cache, na)
     x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
@@ -198,13 +207,14 @@ def hybrid_prefill(params, cfg: ArchConfig, tokens, *, max_len: int):
     n_pts = n_attn_points(cfg)
     mamba_caches, attn_caches = [], []
     for i in range(cfg.n_layers):
+        cfg_i = cm.layer_quant_cfg(cfg, i)
         layer = jax.tree.map(lambda t: t[i], params["mamba_layers"])
-        h = cm.rms_norm(layer["norm"], x, cfg.norm_eps)
-        d, mc = ssm_mod.mamba2_prefill(layer["block"], h, cfg)
+        h = cm.rms_norm(layer["norm"], x, cfg_i.norm_eps)
+        d, mc = ssm_mod.mamba2_prefill(layer["block"], h, cfg_i)
         x = x + d
         mamba_caches.append(mc)
         if (i + 1) % every == 0 and (i + 1) // every <= n_pts:
-            x, ac = _shared_block_prefill(params["shared"], x, x0, cfg,
+            x, ac = _shared_block_prefill(params["shared"], x, x0, cfg_i,
                                           positions=positions, mask=mask,
                                           max_len=max_len)
             attn_caches.append(ac)

@@ -119,23 +119,36 @@ def init_lm(key, cfg: ArchConfig):
     return p
 
 
-def _run_stack(stacked, x, cfg: ArchConfig, positions, mask):
-    """Scan (or unrolled loop) over a homogeneous layer stack."""
-    def body(carry, layer_params):
-        y, aux = layer_forward(layer_params, carry, cfg,
-                               positions=positions, mask=mask)
-        return y, aux.get("load_balance_loss", jnp.float32(0.0))
+def _run_stack(stacked, x, cfg: ArchConfig, positions, mask, *,
+               layer0: int = 0):
+    """Scan (or unrolled loop) over a homogeneous layer stack.
 
-    if cfg.remat:
-        body = jax.checkpoint(body, prevent_cse=False)
-    if cfg.scan_layers:
-        x, lb = jax.lax.scan(body, x, stacked)
+    A per-layer quant schedule (``cfg.quant.m_schedule``, §IV-D) forces the
+    unrolled walk — scan requires a layer-uniform body, and the schedule
+    makes each layer's level count a distinct static value.  ``layer0`` is
+    the stack's global layer offset (dense_layers first, then the main
+    stack), so schedule indices line up across both stacks.
+    """
+    per_layer = cfg.quant.m_schedule is not None
+
+    def make_body(cfg_i):
+        def body(carry, layer_params):
+            y, aux = layer_forward(layer_params, carry, cfg_i,
+                                   positions=positions, mask=mask)
+            return y, aux.get("load_balance_loss", jnp.float32(0.0))
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        return body
+
+    if cfg.scan_layers and not per_layer:
+        x, lb = jax.lax.scan(make_body(cfg), x, stacked)
         return x, jnp.sum(lb)
     n = jax.tree.leaves(stacked)[0].shape[0]
     total = jnp.float32(0.0)
     for i in range(n):
         layer = jax.tree.map(lambda t: t[i], stacked)
-        x, lb = body(x, layer)
+        x, lb = make_body(cm.layer_quant_cfg(cfg, layer0 + i))(x, layer)
         total += lb
     return x, total
 
@@ -152,7 +165,8 @@ def lm_hidden(params, cfg: ArchConfig, tokens, *, prefix_embeds=None):
     if "dense_layers" in params:
         x, lb = _run_stack(params["dense_layers"], x, cfg, positions, mask)
         lb_total += lb
-    x, lb = _run_stack(params["layers"], x, cfg, positions, mask)
+    x, lb = _run_stack(params["layers"], x, cfg, positions, mask,
+                       layer0=cfg.n_dense_layers)
     lb_total += lb
     x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
     if prefix_embeds is not None:
@@ -216,39 +230,46 @@ def init_lm_cache(cfg: ArchConfig, batch: int, max_len: int):
     return jax.tree.map(mk, lm_cache_specs(cfg, batch, max_len))
 
 
-def _decode_stack(stacked, caches, x, cfg: ArchConfig, pos):
-    def body(carry, inp):
+def _decode_stack(stacked, caches, x, cfg: ArchConfig, pos, *,
+                  layer0: int = 0):
+    per_layer = cfg.quant.m_schedule is not None
+
+    def body(carry, inp, cfg_i=cfg):
         layer_params, cache = inp
-        y, new_cache = layer_decode(layer_params, carry, cfg, cache, pos)
+        y, new_cache = layer_decode(layer_params, carry, cfg_i, cache, pos)
         return y, new_cache
 
-    if cfg.scan_layers:
+    if cfg.scan_layers and not per_layer:
         return jax.lax.scan(body, x, (stacked, caches))
     n = jax.tree.leaves(stacked)[0].shape[0]
     new_caches = []
     for i in range(n):
         layer = jax.tree.map(lambda t: t[i], stacked)
         cache = jax.tree.map(lambda t: t[i], caches)
-        x, nc = body(x, (layer, cache))
+        x, nc = body(x, (layer, cache),
+                     cfg_i=cm.layer_quant_cfg(cfg, layer0 + i))
         new_caches.append(nc)
     stacked_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *new_caches)
     return x, stacked_cache
 
 
-def _prefill_stack(stacked, x, cfg: ArchConfig, positions, mask, max_len):
+def _prefill_stack(stacked, x, cfg: ArchConfig, positions, mask, max_len, *,
+                   layer0: int = 0):
     """Run a homogeneous layer stack over the full sequence, collecting each
     layer's decode cache (stacked [L, ...], same layout as lm_cache_specs)."""
-    def body(carry, layer_params):
-        return layer_prefill(layer_params, carry, cfg, positions=positions,
+    per_layer = cfg.quant.m_schedule is not None
+
+    def body(carry, layer_params, cfg_i=cfg):
+        return layer_prefill(layer_params, carry, cfg_i, positions=positions,
                              mask=mask, max_len=max_len)
 
-    if cfg.scan_layers:
+    if cfg.scan_layers and not per_layer:
         return jax.lax.scan(body, x, stacked)
     n = jax.tree.leaves(stacked)[0].shape[0]
     caches = []
     for i in range(n):
         layer = jax.tree.map(lambda t: t[i], stacked)
-        x, kv = body(x, layer)
+        x, kv = body(x, layer, cfg_i=cm.layer_quant_cfg(cfg, layer0 + i))
         caches.append(kv)
     return x, jax.tree.map(lambda *ts: jnp.stack(ts), *caches)
 
@@ -270,7 +291,8 @@ def lm_prefill(params, cfg: ArchConfig, tokens, *, max_len: int):
         x, nc = _prefill_stack(params["dense_layers"], x, cfg, positions,
                                mask, max_len)
         cache["dense_layers"] = nc
-    x, nc = _prefill_stack(params["layers"], x, cfg, positions, mask, max_len)
+    x, nc = _prefill_stack(params["layers"], x, cfg, positions, mask, max_len,
+                           layer0=cfg.n_dense_layers)
     cache["layers"] = nc
     x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
     return lm_logits(params, cfg, x), cache
@@ -284,7 +306,8 @@ def lm_decode_step(params, cfg: ArchConfig, tokens, pos, cache):
         x, nc = _decode_stack(params["dense_layers"], cache["dense_layers"],
                               x, cfg, pos)
         new_cache["dense_layers"] = nc
-    x, nc = _decode_stack(params["layers"], cache["layers"], x, cfg, pos)
+    x, nc = _decode_stack(params["layers"], cache["layers"], x, cfg, pos,
+                          layer0=cfg.n_dense_layers)
     new_cache["layers"] = nc
     x = cm.rms_norm(params["final_norm"], x, cfg.norm_eps)
     return lm_logits(params, cfg, x), new_cache

@@ -115,6 +115,13 @@ class CNNService:
                   late-binds ``repro.deploy.executor.execute`` so
                   fault-injection patches apply.
     interpret:    Pallas interpret override passed through to the executor.
+    mesh_plan:    optional :class:`repro.distributed.MeshPlan` — batches are
+                  served through ``distributed.execute_sharded`` (bit-exact
+                  vs the single-device path, so every SLO/degradation
+                  contract carries over unchanged).  ``batch_size`` must
+                  divide evenly over the plan's data axis: the service
+                  always pads to ``batch_size``, and an uneven split would
+                  silently waste a device column every step.
     selftest_every: run the golden self-test (``deploy.self_test``, always
                   the *clean* execute path — the BIST diagnoses the program,
                   not the fault harness) on the active rung every this-many
@@ -140,6 +147,7 @@ class CNNService:
                  sleep=time.sleep,
                  execute_fn=None,
                  interpret: bool | None = None,
+                 mesh_plan=None,
                  initial_rung: int = 0,
                  selftest_every: int | None = None,
                  checkpoint_manager=None,
@@ -164,6 +172,18 @@ class CNNService:
         self.clock = clock
         self.sleep = sleep
         self.interpret = interpret
+        if mesh_plan is not None:
+            if len(mesh_plan.shards) != len(program.instrs):
+                raise ValueError(
+                    f"mesh_plan carries {len(mesh_plan.shards)} shard(s) "
+                    f"for a {len(program.instrs)}-instruction program")
+            if batch_size % mesh_plan.n_data:
+                raise ValueError(
+                    f"batch_size={batch_size} must divide over the mesh "
+                    f"data axis (n_data={mesh_plan.n_data}): the service "
+                    f"pads every batch to batch_size, so an uneven split "
+                    f"wastes a device column every step")
+        self.mesh_plan = mesh_plan
         self._execute_fn = execute_fn
         self.selftest_every = selftest_every
         self.checkpoint_manager = checkpoint_manager
@@ -379,6 +399,12 @@ class CNNService:
         if self._execute_fn is not None:
             return self._execute_fn(self.program, x, sched,
                                     interpret=self.interpret)
+        if self.mesh_plan is not None:
+            from repro.distributed import executor as dist_executor
+
+            return dist_executor.execute_sharded(
+                self.program, self.mesh_plan, x, m_active=sched,
+                interpret=self.interpret)
         # late binding: resolve the module attribute at call time so a
         # testing.faults.inject_faults patch is seen (deploy.execute — the
         # import-time binding — stays clean for reference outputs)

@@ -1,0 +1,151 @@
+"""Multi-host checkpointing: per-host manifests + cross-host digest exchange.
+
+With ``n_hosts > 1`` the step dir is SHARED: each host merge-commits its own
+``host_<id>.npz`` + ``manifest_host_<id>.json`` with per-file atomic
+replaces (the single-host rename-aside protocol would displace the other
+hosts' files).  ``cross_host_digests`` is the all-gather-style audit over
+that layout: every host's leaves are re-hashed and leaves recorded by more
+than one host must hash identically (replicated state that diverges across
+hosts is a silent training bug checksums alone cannot see — each host's
+local file is self-consistent).
+
+All tests fake the multi-host fleet with two managers sharing one directory
+under different ``host_id``s — the same process-index trick jax distributed
+tests use, no actual multi-process setup required.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(host: int, shared_val: float = 1.0):
+    """A host-local leaf plus a 'shared' leaf every host replicates."""
+    local = {0: {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+             1: {"b": np.arange(3, dtype=np.float32)}}[host]
+    return {**local, "shared": np.full((4,), shared_val, np.float32)}
+
+
+@pytest.fixture
+def fleet(tmp_path):
+    d = str(tmp_path)
+    m0 = CheckpointManager(d, host_id=0, n_hosts=2)
+    m1 = CheckpointManager(d, host_id=1, n_hosts=2)
+    return d, m0, m1
+
+
+class TestMultiHostLayout:
+    def test_hosts_share_one_step_dir(self, fleet):
+        _, m0, m1 = fleet
+        m0.save(1, _tree(0))
+        m1.save(1, _tree(1))
+        names = sorted(os.listdir(m0._step_dir(1)))
+        assert names == ["host_0.npz", "host_1.npz",
+                         "manifest_host_0.json", "manifest_host_1.json"]
+        assert m0.all_steps() == [1]
+        assert m1.all_steps() == [1]
+
+    def test_second_host_commit_keeps_first_hosts_files(self, fleet):
+        """The merge commit must never displace a sibling's files — saving
+        host 1 after host 0 leaves host 0's step restorable bit-exact."""
+        _, m0, m1 = fleet
+        m0.save(1, _tree(0))
+        m1.save(1, _tree(1))
+        back, _ = m0.restore(1, {"w": np.zeros((2, 3), np.float32),
+                                 "shared": np.zeros((4,), np.float32)})
+        np.testing.assert_array_equal(back["w"], _tree(0)["w"])
+
+    def test_each_host_restores_its_own_leaves(self, fleet):
+        _, m0, m1 = fleet
+        m0.save(1, _tree(0))
+        m1.save(1, _tree(1))
+        back, _ = m1.restore(1, {"b": np.zeros((3,), np.float32),
+                                 "shared": np.zeros((4,), np.float32)})
+        np.testing.assert_array_equal(back["b"], _tree(1)["b"])
+        np.testing.assert_array_equal(back["shared"], _tree(1)["shared"])
+
+    def test_only_host_zero_garbage_collects(self, tmp_path):
+        """Racing gc from every host would delete steps a slower host is
+        still committing into — gc is host 0's job alone."""
+        d = str(tmp_path)
+        m0 = CheckpointManager(d, keep=1, host_id=0, n_hosts=2)
+        m1 = CheckpointManager(d, keep=1, host_id=1, n_hosts=2)
+        m1.save(1, _tree(1))
+        m1.save(2, _tree(1))
+        assert m1.all_steps() == [1, 2]      # host 1 never gc'd
+        m0.save(2, _tree(0))
+        assert m0.all_steps() == [2]         # host 0 enforces keep=1
+
+
+class TestCrossHostDigests:
+    def test_clean_fleet_reports_ok(self, fleet):
+        _, m0, m1 = fleet
+        m0.save(1, _tree(0))
+        m1.save(1, _tree(1))
+        rep = m0.cross_host_digests(1)
+        assert rep["ok"] and rep["mismatches"] == []
+        assert sorted(rep["hosts"]) == [0, 1]
+        for info in rep["hosts"].values():
+            assert info["problems"] == []
+        # the replicated leaf was gathered from BOTH hosts and agreed
+        assert rep["hosts"][0]["leaves"]["shared"] \
+            == rep["hosts"][1]["leaves"]["shared"]
+
+    def test_diverged_replicated_leaf_is_a_mismatch(self, fleet):
+        """Each host's file is locally self-consistent (digests pass), but
+        the replicated leaf differs between hosts — exactly the failure
+        class only the cross-host exchange can catch."""
+        _, m0, m1 = fleet
+        m0.save(1, _tree(0, shared_val=1.0))
+        m1.save(1, _tree(1, shared_val=2.0))
+        rep = m0.cross_host_digests(1)
+        assert not rep["ok"]
+        assert [m["leaf"] for m in rep["mismatches"]] == ["shared"]
+        assert sorted(rep["mismatches"][0]["digests"]) == [0, 1]
+        # local verification stays clean on both sides
+        for info in rep["hosts"].values():
+            assert info["problems"] == []
+
+    def test_corrupt_host_file_is_that_hosts_problem(self, fleet):
+        _, m0, m1 = fleet
+        m0.save(1, _tree(0))
+        m1.save(1, _tree(1))
+        npz = os.path.join(m0._step_dir(1), "host_0.npz")
+        blob = bytearray(open(npz, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF
+        open(npz, "wb").write(bytes(blob))
+        rep = m1.cross_host_digests(1)
+        assert not rep["ok"]
+        assert rep["hosts"][0]["problems"]
+        assert rep["hosts"][1]["problems"] == []
+        # the unaffected host still restores cleanly
+        back, _ = m1.restore(1, {"b": np.zeros((3,), np.float32),
+                                 "shared": np.zeros((4,), np.float32)})
+        np.testing.assert_array_equal(back["b"], _tree(1)["b"])
+
+    def test_missing_host_file_is_reported(self, fleet):
+        _, m0, m1 = fleet
+        m0.save(1, _tree(0))
+        m1.save(1, _tree(1))
+        os.remove(os.path.join(m0._step_dir(1), "host_1.npz"))
+        rep = m0.cross_host_digests(1)
+        assert not rep["ok"]
+        assert any("host_1.npz missing" in p
+                   for p in rep["hosts"][1]["problems"])
+
+    def test_single_host_step_audits_as_host_zero(self, tmp_path):
+        """Legacy single-host steps (plain manifest.json) still audit: the
+        manifest counts as host 0's contribution."""
+        m = CheckpointManager(str(tmp_path))
+        m.save(1, {"w": np.ones((2,), np.float32)})
+        rep = m.cross_host_digests(1)
+        assert rep["ok"] and list(rep["hosts"]) == [0]
+        assert rep["hosts"][0]["problems"] == []
+
+    def test_missing_step_raises(self, fleet):
+        _, m0, _ = fleet
+        from repro.checkpoint.manager import CheckpointCorruption
+        with pytest.raises(CheckpointCorruption, match="no step dir"):
+            m0.cross_host_digests(99)

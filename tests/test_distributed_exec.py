@@ -1,0 +1,171 @@
+"""Multi-device execute_sharded: bit-exactness on an 8-virtual-device mesh.
+
+The acceptance bar for the distributed runtime: ``execute_sharded`` under
+any :class:`MeshPlan` returns *bitwise* the arrays ``deploy.execute``
+returns — for CNN-A (pure data parallelism: no layer is bd-shardable) and
+reduced MobileNet (data x model 4x2: the point-wise layers split their
+output channels), across global / per-layer §IV-D schedules and ragged
+batches, with zero trace-time plan picks and no retraces on repeat calls.
+
+This module needs 8 devices.  CPU provides them virtually::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_distributed_exec.py
+
+(the CI fast tier runs exactly that); under a plain single-device run the
+whole module skips.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import deploy, distributed
+from repro.analysis import verify_mesh_plan
+from repro.core.binlinear import QuantConfig
+from repro.kernels import binary_conv as bck
+from repro.models import cnn
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+QC = QuantConfig(mode="binary", M=2, K_iters=4, interpret=True)
+
+
+@pytest.fixture(scope="module")
+def cnn_a():
+    params = cnn.init_cnn_a(jax.random.PRNGKey(0))
+    bp = cnn.binarize_cnn_a(params, QC)
+    prog = deploy.compile(bp, "cnn_a", QC, (8, 48, 48, 3))
+    plan = distributed.plan_mesh(prog, n_data=8)
+    return prog, plan
+
+
+@pytest.fixture(scope="module")
+def mobilenet():
+    params = cnn.init_mobilenet(jax.random.PRNGKey(2), width_mult=0.25,
+                                n_classes=10)
+    qc = QC.replace(K_iters=2)
+    bp = cnn.binarize_mobilenet(params, qc)
+    prog = deploy.compile(bp, "mobilenet", qc, (8, 32, 32, 3))
+    plan = distributed.plan_mesh(prog, n_data=4, n_model=2,
+                                 min_shard_bytes=0)
+    return prog, plan
+
+
+def _x(key, b, hw):
+    return jax.random.normal(jax.random.PRNGKey(key), (b, hw, hw, 3),
+                             jnp.float32)
+
+
+def _assert_parity(prog, plan, x, m_active):
+    want = deploy.execute(prog, x, m_active=m_active)
+    got = distributed.execute_sharded(prog, plan, x, m_active=m_active)
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestPureDataParallel:
+    """CNN-A: every layer replicated, the batch splits 8 ways."""
+
+    def test_plan_shape(self, cnn_a):
+        prog, plan = cnn_a
+        assert plan.devices == 8
+        assert all(s.kind == "replicated" for s in plan.shards)
+        assert verify_mesh_plan(prog, plan) == []
+
+    @pytest.mark.parametrize("m_active", [None, 1, 2, (2, 1, 2, 1, 1)])
+    def test_bit_exact_full_batch(self, cnn_a, m_active):
+        prog, plan = cnn_a
+        _assert_parity(prog, plan, _x(1, 8, 48), m_active)
+
+    @pytest.mark.parametrize("batch", [5, 11])
+    def test_bit_exact_ragged_batch(self, cnn_a, batch):
+        """B % n_data != 0: zero images pad the last column(s) and the
+        output slices back to B — still bitwise."""
+        prog, plan = cnn_a
+        _assert_parity(prog, plan, _x(2, batch, 48), (2, 1, 2, 1, 1))
+
+
+class TestModelParallel:
+    """MobileNet 4x2: point-wise layers split output channels over the
+    model axis; channel slices are gathered without any fp reduction."""
+
+    def test_plan_shards_pointwise_layers(self, mobilenet):
+        prog, plan = mobilenet
+        assert plan.devices == 8 and plan.n_model == 2
+        assert sum(1 for s in plan.shards if s.kind == "bd") > 0
+        assert verify_mesh_plan(prog, plan) == []
+
+    @pytest.mark.parametrize("m_active", [None, 1, "mix"])
+    def test_bit_exact_full_batch(self, mobilenet, m_active):
+        prog, plan = mobilenet
+        if m_active == "mix":
+            m_active = tuple((i % 2) + 1 for i in range(len(prog.instrs)))
+        _assert_parity(prog, plan, _x(3, 8, 32), m_active)
+
+    def test_bit_exact_ragged_batch(self, mobilenet):
+        prog, plan = mobilenet
+        sched = tuple((i % 2) + 1 for i in range(len(prog.instrs)))
+        _assert_parity(prog, plan, _x(4, 5, 32), sched)
+
+
+class TestNoPicksNoRetraces:
+    def test_sharded_execution_runs_zero_plan_picks(self, mobilenet):
+        """The distributed tier inherits the compiler's contract: every
+        tile decision (including the device-local bd plans) froze at
+        plan_mesh time — tracing the sharded forward picks nothing."""
+        prog, plan = mobilenet
+        bck.reset_plan_pick_count()
+        distributed.execute_sharded(prog, plan, _x(5, 8, 32), m_active=2)
+        assert bck.plan_pick_count() == 0
+
+    def test_repeat_calls_do_not_retrace(self, cnn_a):
+        prog, plan = cnn_a
+        x = _x(6, 8, 48)
+        distributed.execute_sharded(prog, plan, x, m_active=1)
+        distributed.reset_trace_entry_count()
+        distributed.execute_sharded(prog, plan, x, m_active=1)
+        assert distributed.trace_entry_count() == 0
+        assert distributed.cache_stats()["sharded_fns"] > 0
+
+
+class TestValidation:
+    def test_shard_arity_mismatch_raises(self, cnn_a, mobilenet):
+        prog, _ = cnn_a
+        _, wrong_plan = mobilenet
+        with pytest.raises(ValueError, match="shard"):
+            distributed.execute_sharded(prog, wrong_plan, _x(7, 8, 48))
+
+
+class TestCNNServiceOnMesh:
+    def test_service_with_mesh_plan_serves_bit_exact(self, cnn_a):
+        """CNNService(mesh_plan=...) routes batches through
+        execute_sharded — answers stay bit-exact vs the single-device
+        service, so every SLO/fault contract carries over."""
+        from repro.serve_cnn import CNNService
+
+        prog, plan = cnn_a
+        imgs = np.asarray(_x(8, 4, 48))
+        answers = {}
+        for mp in (None, plan):
+            svc = CNNService(prog, batch_size=8, mesh_plan=mp)
+            reqs = [svc.submit(img) for img in imgs]
+            svc.drain()
+            assert all(r.status == "done" for r in reqs)
+            answers[mp is None] = np.stack([r.logits for r in reqs])
+        np.testing.assert_array_equal(answers[True], answers[False])
+
+    def test_service_validates_mesh_plan(self, cnn_a, mobilenet):
+        from repro.serve_cnn import CNNService
+
+        prog, plan = cnn_a
+        with pytest.raises(ValueError, match="divide"):
+            CNNService(prog, batch_size=4, mesh_plan=plan)  # 4 % 8 != 0
+        _, wrong = mobilenet
+        with pytest.raises(ValueError, match="shard"):
+            CNNService(prog, batch_size=8, mesh_plan=wrong)

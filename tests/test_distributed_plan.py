@@ -1,0 +1,241 @@
+"""MeshPlan planning, verification, and per-device accounting (always-run).
+
+The multi-device executor's correctness tier needs 8 virtual devices
+(test_distributed_exec.py); everything HERE is static — ``plan_mesh``,
+``analysis.verify_mesh_plan``, ``distributed.stats`` read shapes and frozen
+aux only, so the planning policy and every seeded-illegal verifier rule run
+on any single-device CPU.  Abstract programs (``deploy.abstract_program``)
+keep it weight-free and fast.
+
+Seeded-illegal fixtures follow the verifier suite's pattern: take a clean
+planner output, break exactly one invariant with ``dataclasses.replace``,
+and assert the intended rule id fires (and only then).
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro import deploy
+from repro.analysis import verify_mesh_plan
+from repro.core.binlinear import QuantConfig
+from repro.deploy.program import TilePlan
+from repro.distributed import (DEFAULT_MIN_SHARD_BYTES, LayerShard, MeshPlan,
+                               mesh_totals, plan_mesh, shard_layer_stats)
+from repro.kernels import binary_conv as bck
+
+jax.config.update("jax_platform_name", "cpu")
+
+QC = QuantConfig(mode="binary", M=2, K_iters=4, interpret=True)
+
+
+@pytest.fixture(scope="module")
+def cnn_a():
+    return deploy.abstract_program("cnn_a", QC, (8, 48, 48, 3))
+
+
+@pytest.fixture(scope="module")
+def mobilenet():
+    return deploy.abstract_program("mobilenet", QC.replace(K_iters=2),
+                                   (8, 32, 32, 3), width_mult=0.25,
+                                   n_classes=10)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+class TestPlanPolicy:
+    def test_cnn_a_is_pure_data_parallel(self, cnn_a):
+        """CNN-A has no bd-shardable layer (conv1 D=5 < 8 channels/device,
+        conv2 D=150 leaves a non-8-divisible slice) — any mesh degenerates
+        to replicated-weights data parallelism, the paper's plain
+        Processing-Array replication."""
+        plan = plan_mesh(cnn_a, n_data=4, n_model=2, min_shard_bytes=0,
+                         pointwise_only=False)
+        assert all(s.kind == "replicated" for s in plan.shards)
+        assert len(plan.shards) == len(cnn_a.instrs)
+        assert plan.global_batch == 8 and plan.devices == 8
+
+    def test_mobilenet_pointwise_layers_shard(self, mobilenet):
+        plan = plan_mesh(mobilenet, n_data=4, n_model=2, min_shard_bytes=0)
+        bd = [(i, s) for i, s in enumerate(plan.shards) if s.kind == "bd"]
+        assert bd, "expected bd-sharded point-wise layers at n_model=2"
+        for i, s in bd:
+            instr = mobilenet.instrs[i]
+            assert instr.kh == 1 and instr.kw == 1      # point-wise only
+            assert s.d_local * 2 == int(instr.alpha.shape[-1])
+            assert s.plan is not None and s.plan.bd is not None
+            assert s.per_device_weight_bytes \
+                == int(instr.stats.weight_bytes) // 2
+
+    def test_min_shard_bytes_gates_small_layers(self, mobilenet):
+        """Below the byte floor the all_gather is not worth it: a huge floor
+        must plan everything replicated, the default floor strictly fewer
+        shards than floor-zero."""
+        all_in = plan_mesh(mobilenet, n_data=4, n_model=2, min_shard_bytes=0)
+        floored = plan_mesh(mobilenet, n_data=4, n_model=2,
+                            min_shard_bytes=DEFAULT_MIN_SHARD_BYTES)
+        none = plan_mesh(mobilenet, n_data=4, n_model=2,
+                         min_shard_bytes=1 << 40)
+        n = [sum(1 for s in p.shards if s.kind == "bd")
+             for p in (all_in, floored, none)]
+        assert n[0] >= n[1] >= n[2] == 0
+
+    def test_planning_counts_zero_plan_picks(self, mobilenet):
+        """Device-local tile plans are co-picked with the compiler's own
+        exported machinery — wrapped so planning never shows up on the
+        trace-time pick counter the lint gate reads."""
+        bck.reset_plan_pick_count()
+        plan_mesh(mobilenet, n_data=4, n_model=2, min_shard_bytes=0)
+        assert bck.plan_pick_count() == 0
+
+    def test_plan_validation(self, cnn_a):
+        with pytest.raises(ValueError, match="mesh axes"):
+            plan_mesh(cnn_a, n_data=0)
+        with pytest.raises(ValueError, match="global_batch"):
+            plan_mesh(cnn_a, n_data=2, global_batch=0)
+
+    def test_mesh_plan_properties(self, cnn_a):
+        plan = plan_mesh(cnn_a, n_data=3, global_batch=8)
+        assert plan.devices == 3
+        assert plan.local_batch == 3          # ceil(8 / 3)
+        lines = plan.describe()
+        assert "mesh 3x1" in lines[0]
+        assert len(lines) == 1 + len(plan.shards)
+
+
+class TestVerifierCleanOnPlannerOutput:
+    @pytest.mark.parametrize("n_model", [1, 2])
+    def test_planner_output_is_clean(self, mobilenet, n_model):
+        plan = plan_mesh(mobilenet, n_data=4, n_model=n_model,
+                         min_shard_bytes=0)
+        assert verify_mesh_plan(mobilenet, plan) == []
+
+    def test_cnn_a_clean(self, cnn_a):
+        plan = plan_mesh(cnn_a, n_data=8)
+        assert verify_mesh_plan(cnn_a, plan) == []
+
+
+class TestSeededIllegalPlans:
+    """Each fixture breaks ONE invariant; the named rule must fire."""
+
+    @pytest.fixture()
+    def mn_plan(self, mobilenet):
+        return plan_mesh(mobilenet, n_data=4, n_model=2, min_shard_bytes=0)
+
+    def _bd_idx(self, plan):
+        return next(i for i, s in enumerate(plan.shards) if s.kind == "bd")
+
+    def _swap(self, plan, idx, shard):
+        shards = list(plan.shards)
+        shards[idx] = shard
+        return dataclasses.replace(plan, shards=tuple(shards))
+
+    def test_wrong_arity_fires_shard_plan(self, mobilenet, mn_plan):
+        bad = dataclasses.replace(mn_plan, shards=mn_plan.shards[:-1])
+        assert _rules(verify_mesh_plan(mobilenet, bad)) == ["shard-plan"]
+
+    def test_bad_axis_size_fires_shard_plan(self, mobilenet, mn_plan):
+        bad = dataclasses.replace(mn_plan, n_data=0)
+        assert _rules(verify_mesh_plan(mobilenet, bad)) == ["shard-plan"]
+
+    def test_unknown_kind_fires_shard_plan(self, mobilenet, mn_plan):
+        bad = self._swap(mn_plan, 0, LayerShard(kind="columnwise"))
+        assert "shard-plan" in _rules(verify_mesh_plan(mobilenet, bad))
+
+    def test_bd_on_non_conv_fires_shard_plan(self, cnn_a):
+        plan = plan_mesh(cnn_a, n_data=4, n_model=2)
+        fc = next(i for i, ins in enumerate(cnn_a.instrs)
+                  if ins.kind != "conv")
+        bad = self._swap(plan, fc, LayerShard(
+            kind="bd", d_local=8, plan=TilePlan(nb=1, bu=1, bd=128)))
+        fs = verify_mesh_plan(cnn_a, bad)
+        assert any(f.rule == "shard-plan" and f.index == fc for f in fs)
+
+    def test_unfrozen_local_plan_fires_shard_plan(self, mobilenet, mn_plan):
+        """A bd shard without a frozen device-local plan would re-pick
+        inside the sharded trace — the exact sin the compiler exists to
+        prevent."""
+        i = self._bd_idx(mn_plan)
+        bad = self._swap(mn_plan, i,
+                         dataclasses.replace(mn_plan.shards[i], plan=None))
+        fs = verify_mesh_plan(mobilenet, bad)
+        assert any(f.rule == "shard-plan" and f.index == i for f in fs)
+
+    def test_non_dividing_channels_fire_shard_divisibility(self, mobilenet,
+                                                           mn_plan):
+        bad = dataclasses.replace(mn_plan, n_model=3)
+        fs = verify_mesh_plan(mobilenet, bad)
+        assert "shard-divisibility" in _rules(fs)
+
+    def test_wrong_d_local_fires_shard_divisibility(self, mobilenet, mn_plan):
+        i = self._bd_idx(mn_plan)
+        s = mn_plan.shards[i]
+        bad = self._swap(mn_plan, i,
+                         dataclasses.replace(s, d_local=s.d_local + 8))
+        fs = verify_mesh_plan(mobilenet, bad)
+        assert any(f.rule == "shard-divisibility" and f.index == i
+                   for f in fs)
+
+    def test_illegal_lane_tile_fires_shard_lane(self, mobilenet, mn_plan):
+        i = self._bd_idx(mn_plan)
+        s = mn_plan.shards[i]
+        bad = self._swap(mn_plan, i, dataclasses.replace(
+            s, plan=dataclasses.replace(s.plan, bd=24)))
+        fs = verify_mesh_plan(mobilenet, bad)
+        assert any(f.rule == "shard-lane" and f.index == i for f in fs)
+
+    def test_bad_byte_split_fires_shard_accounting(self, mobilenet, mn_plan):
+        bad = self._swap(mn_plan, 0, dataclasses.replace(
+            mn_plan.shards[0], per_device_weight_bytes=12345))
+        fs = verify_mesh_plan(mobilenet, bad)
+        assert any(f.rule == "shard-accounting" and f.severity == "WARN"
+                   for f in fs)
+
+    def test_ragged_global_batch_fires_shard_batch(self, mobilenet, mn_plan):
+        bad = dataclasses.replace(mn_plan, global_batch=7)
+        fs = verify_mesh_plan(mobilenet, bad)
+        assert any(f.rule == "shard-batch" and f.severity == "WARN"
+                   for f in fs)
+
+
+class TestShardStats:
+    def test_arity_mismatch_raises(self, cnn_a, mobilenet):
+        plan = plan_mesh(cnn_a, n_data=2)
+        with pytest.raises(ValueError, match="instruction"):
+            shard_layer_stats(mobilenet, plan)
+
+    def test_pure_dp_totals(self, cnn_a):
+        plan = plan_mesh(cnn_a, n_data=4)
+        tot = mesh_totals(cnn_a, plan)
+        assert tot["devices_per_forward"] == 4
+        assert tot["sharded_layers"] == 0
+        assert tot["gather_bytes"] == 0
+        # everything replicated: fleet bytes = devices x one copy
+        assert tot["replication_overhead"] == pytest.approx(4.0)
+        assert tot["per_device_weight_bytes"] \
+            == tot["replicated_weight_bytes"]
+
+    def test_bd_sharding_cuts_replication_and_bytes(self, mobilenet):
+        dp = plan_mesh(mobilenet, n_data=8, n_model=1)
+        mp = plan_mesh(mobilenet, n_data=4, n_model=2, min_shard_bytes=0)
+        t_dp, t_mp = mesh_totals(mobilenet, dp), mesh_totals(mobilenet, mp)
+        assert t_dp["devices_per_forward"] == t_mp["devices_per_forward"] == 8
+        # sharding weights over the model axis must strictly beat pure DP
+        # on both per-device bytes and fleet replication
+        assert t_mp["per_device_weight_bytes"] \
+            < t_dp["per_device_weight_bytes"]
+        assert t_mp["replication_overhead"] < t_dp["replication_overhead"]
+        assert t_mp["gather_bytes"] > 0
+        assert t_mp["sharded_layers"] > 0
+
+    def test_rows_are_json_shaped(self, mobilenet):
+        plan = plan_mesh(mobilenet, n_data=4, n_model=2, min_shard_bytes=0)
+        rows = shard_layer_stats(mobilenet, plan)
+        assert len(rows) == len(mobilenet.instrs)
+        for r in rows:
+            assert r["shard"] in ("replicated", "bd")
+            assert r["per_device_vmem_bytes"] > 0
+            if r["shard"] == "bd":
+                assert set(r["local_plan"]) == {"nb", "bu", "bd"}

@@ -1,0 +1,176 @@
+"""Per-layer §IV-D m_active schedules through the LM stack and server.
+
+``deploy.execute`` has taken per-layer schedules since PR 5; this tier
+extends the same runtime knob to the *language-model* families:
+``QuantConfig.m_schedule`` installs a per-decoder-layer level count
+(resolved by ``models.common.layer_quant_cfg`` inside the unrolled layer
+walks), and ``launch.serve.Request.m_active`` accepts a sequence so a
+single served request can run its early layers fast and late layers
+accurate off one set of packed buffers.
+
+Claims under test:
+  * a uniform schedule is the SAME trace as the global int — bitwise;
+  * a non-uniform schedule differs from every uniform level count (the
+    knob is observable) and schedules reach decode AND prefill;
+  * the server normalizes: uniform tuples collapse onto the int/None
+    compiled variant (bounded compile cache), non-uniform tuples get their
+    own variant; admission validates entries;
+  * all three edited layer walks (dense scan stack, ssm, hybrid) resolve
+    schedules.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.core.binlinear import QuantConfig
+from repro.launch.serve import Request, Server
+from repro.models import api
+
+jax.config.update("jax_platform_name", "cpu")
+
+FAMILIES = {
+    "transformer": "gemma_2b",
+    "ssm": "mamba2_2_7b",
+    "hybrid": "zamba2_7b",
+}
+QC = QuantConfig(mode="binary", M=2, K_iters=2)
+
+
+def _setup(family):
+    cfg = (cb.reduced(cb.get_config(FAMILIES[family]))
+           .replace(dtype="float32", quant=QC))
+    params = api.binarize_model_params(
+        cfg, api.init_params(cfg, jax.random.PRNGKey(0)), qc=QC)
+    return cfg, params
+
+
+def _sched_cfg(cfg, sched):
+    return cfg.replace(quant=cfg.quant.replace(m_schedule=tuple(sched)))
+
+
+def _fwd(cfg, params, toks):
+    logits, _ = api.forward(cfg, params, {"tokens": jax.numpy.asarray(toks)})
+    return np.asarray(logits)
+
+
+class TestForwardSchedules:
+    @pytest.mark.parametrize("family", list(FAMILIES))
+    def test_uniform_schedule_equals_global_int(self, family):
+        """(1, 1) is the same per-layer resolution as m_active=1 — the
+        schedule walk must produce the identical computation, bitwise."""
+        cfg, params = _setup(family)
+        toks = [[3, 7, 11, 2]]
+        want = _fwd(cfg.replace(quant=cfg.quant.replace(m_active=1)),
+                    params, toks)
+        got = _fwd(_sched_cfg(cfg, (1, 1)), params, toks)
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("family", list(FAMILIES))
+    def test_mixed_schedule_is_observable(self, family):
+        """(1, 2) differs from both uniform settings — each layer really
+        gets its own level count."""
+        cfg, params = _setup(family)
+        toks = [[3, 7, 11, 2]]
+        mixed = _fwd(_sched_cfg(cfg, (1, 2)), params, toks)
+        for m in (1, 2):
+            uni = _fwd(cfg.replace(quant=cfg.quant.replace(m_active=m)),
+                       params, toks)
+            assert not np.array_equal(mixed, uni)
+
+    def test_short_schedule_extends_last_entry(self):
+        """Like deploy.execute's resolve_schedule: a 1-entry schedule
+        covers every layer with that entry."""
+        cfg, params = _setup("transformer")
+        toks = [[3, 7, 11, 2]]
+        short = _fwd(_sched_cfg(cfg, (1,)), params, toks)
+        full = _fwd(_sched_cfg(cfg, (1, 1)), params, toks)
+        np.testing.assert_array_equal(short, full)
+
+    def test_schedule_forces_unrolled_walk_matching_scan(self):
+        """scan_layers configs fall back to the unrolled walk under a
+        schedule (a scan body cannot vary per layer); the fallback itself
+        is numerically faithful: uniform-schedule-under-scan-config equals
+        the scanned global-int forward to fp32 round-off."""
+        cfg, params = _setup("transformer")
+        cfg_scan = cfg.replace(scan_layers=True)
+        toks = [[5, 9, 1, 4]]
+        want = _fwd(cfg_scan.replace(quant=cfg.quant.replace(m_active=1)),
+                    params, toks)
+        got = _fwd(_sched_cfg(cfg_scan, (1, 1)), params, toks)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+class TestServedSchedules:
+    @pytest.mark.parametrize("family", list(FAMILIES))
+    def test_request_schedule_matches_baked_in_config(self, family):
+        """A request carrying m_active=[1, 2] must serve exactly like a
+        server whose config bakes m_schedule=(1, 2) in — prefill and
+        decode both route through the schedule-specialized variants."""
+        cfg, params = _setup(family)
+        prompt = np.array([3, 7, 11, 2], np.int32)
+        srv_req = Server(cfg, params, max_batch=2, max_len=32)
+        r_sched = Request(prompt=prompt.copy(), max_new_tokens=3,
+                          m_active=[1, 2])
+        assert srv_req.admit(r_sched)
+        srv_req.run_until_done()
+
+        srv_baked = Server(_sched_cfg(cfg, (1, 2)), params, max_batch=2,
+                           max_len=32)
+        r_plain = Request(prompt=prompt.copy(), max_new_tokens=3)
+        assert srv_baked.admit(r_plain)
+        srv_baked.run_until_done()
+
+        assert r_sched.out_tokens == r_plain.out_tokens
+        np.testing.assert_array_equal(r_sched.last_logits,
+                                      r_plain.last_logits)
+
+    def test_schedule_differs_from_uniform_serving(self):
+        cfg, params = _setup("transformer")
+        prompt = np.array([3, 7, 11, 2], np.int32)
+        srv = Server(cfg, params, max_batch=2, max_len=32)
+        r_sched = Request(prompt=prompt.copy(), max_new_tokens=1,
+                          m_active=[1, 2])
+        r_full = Request(prompt=prompt.copy(), max_new_tokens=1)
+        assert srv.admit(r_sched) and srv.admit(r_full)
+        srv.run_until_done()
+        assert not np.array_equal(r_sched.last_logits, r_full.last_logits)
+
+    def test_uniform_tuple_collapses_onto_int_variant(self):
+        """(1, 1), 1, and (2, 2) (== M == default) must not each compile
+        their own decode: the normalizer collapses uniform schedules, so
+        the compile-cache bound stays M+1 plus the distinct non-uniform
+        schedules actually served."""
+        cfg, params = _setup("transformer")
+        srv = Server(cfg, params, max_batch=4, max_len=32)
+        assert srv._norm_m((1, 1)) == 1
+        assert srv._norm_m([2, 2]) is None     # uniform M == default
+        assert srv._norm_m((1, 2)) == (1, 2)
+        assert srv._norm_m([7, 7]) is None     # clamps to M, then default
+        prompt = np.array([3, 7], np.int32)
+        for m in ((1, 1), 1):
+            assert srv.admit(Request(prompt=prompt.copy(), max_new_tokens=1,
+                                     m_active=m))
+        srv.run_until_done()
+        assert srv.cache_sizes()["decode_fns"] == 1
+        assert set(srv._decode_fns) == {1}
+
+    def test_distinct_schedules_get_distinct_variants(self):
+        cfg, params = _setup("transformer")
+        srv = Server(cfg, params, max_batch=4, max_len=32)
+        prompt = np.array([3, 7], np.int32)
+        for m in ((1, 2), (2, 1), None):
+            assert srv.admit(Request(prompt=prompt.copy(), max_new_tokens=1,
+                                     m_active=m))
+        srv.run_until_done()
+        assert set(srv._decode_fns) == {(1, 2), (2, 1), None}
+
+    def test_admit_validates_schedule_entries(self):
+        cfg, params = _setup("transformer")
+        srv = Server(cfg, params, max_batch=2, max_len=16)
+        with pytest.raises(ValueError, match="m_active"):
+            srv.admit(Request(prompt=np.array([1, 2], np.int32),
+                              m_active=[1, 0]))
+        with pytest.raises(ValueError, match="m_active"):
+            srv.admit(Request(prompt=np.array([1, 2], np.int32),
+                              m_active=[]))

@@ -65,6 +65,17 @@ METRIC_DIRECTIONS = {
     "recovered_bit_exact": "higher",
     # program totals
     "max_vmem_bytes": "lower",
+    # distributed section (mesh_totals per program x mesh): a planner
+    # change that puts more bytes on one device, re-replicates previously
+    # sharded weights, inflates gather traffic, or needs more devices per
+    # forward is a regression
+    "per_device_weight_bytes": "lower",
+    "per_device_vmem_bytes": "lower",
+    "max_per_device_vmem_bytes": "lower",
+    "replication_overhead": "lower",
+    "replicated_weight_bytes": "lower",
+    "gather_bytes": "lower",
+    "devices_per_forward": "lower",
     # verify summaries
     "errors": "lower",
     "warnings": "lower",
@@ -157,6 +168,23 @@ def diff(base: dict, cand: dict, *, rel_tol: float = 0.01) -> list[Delta]:
                                  "layer missing from candidate"))
                 continue
             _walk_numeric(f"program/{prog}/{lname}", b_layer, c_layer,
+                          rel_tol, out)
+    # --- distributed section: per-device byte splits per program x mesh ---
+    b_dist, c_dist = base.get("distributed", {}), cand.get("distributed", {})
+    for prog in sorted(k for k in b_dist if isinstance(b_dist[k], dict)):
+        c_meshes = c_dist.get(prog)
+        if not isinstance(c_meshes, dict):
+            out.append(Delta(f"distributed/{prog}", "coverage", 1.0, 0.0,
+                             True, "program missing from candidate"))
+            continue
+        for mesh, b_tot in b_dist[prog].items():
+            c_tot = c_meshes.get(mesh)
+            if not isinstance(c_tot, dict):
+                out.append(Delta(f"distributed/{prog}/{mesh}", "coverage",
+                                 1.0, 0.0, True,
+                                 "mesh missing from candidate"))
+                continue
+            _walk_numeric(f"distributed/{prog}/{mesh}", b_tot, c_tot,
                           rel_tol, out)
     # --- verify section: no new findings, ever ---
     b_ver, c_ver = base.get("verify", {}), cand.get("verify", {})

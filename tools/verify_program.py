@@ -1,6 +1,7 @@
 """CI gate: statically verify + trace-lint the shipped BinArrayPrograms.
 
     python tools/verify_program.py [--json PATH] [--skip-retrace]
+                                   [--mesh devices=N[,model=K]]
 
 Runs, for each program in ``benchmarks.run.PROGRAMS`` (CNN-A,
 MobileNet-B1, MobileNet-B2):
@@ -11,7 +12,13 @@ MobileNet-B1, MobileNet-B2):
      — zero fp conv primitives, zero trace-time plan picks, no f64
      (abstract tracing: nothing executes, so MobileNet-B2 @ 224² is cheap);
   3. for CNN-A only (small enough to actually run on CPU interpret mode),
-     the retrace detector across 3x repeated mixed-``m_active`` traffic.
+     the retrace detector across 3x repeated mixed-``m_active`` traffic;
+  4. with ``--mesh devices=N[,model=K]``: plan every program onto the
+     N-device mesh (K-way model parallelism, data parallelism fills the
+     rest) and run ``repro.analysis.verify_mesh_plan`` over the result —
+     shard structure, channel divisibility, device-local lane legality,
+     per-device VMEM budgets, byte accounting.  Static only: no devices
+     are touched, so an 8-device plan audits fine on a 1-CPU runner.
 
 Prints every finding and exits 1 if any ERROR surfaced.  CI runs this in
 the fast tier (.github/workflows/ci.yml).
@@ -32,10 +39,26 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.run import PROGRAMS
-from repro import deploy
-from repro.analysis import mosaic_rules, summarize, trace_lint, verify_program
+from repro import deploy, distributed
+from repro.analysis import (mosaic_rules, summarize, trace_lint,
+                            verify_mesh_plan, verify_program)
 from repro.core.binlinear import QuantConfig
 from repro.models import cnn
+
+
+def _parse_mesh(spec: str) -> tuple[int, int]:
+    """``devices=N[,model=K]`` -> (n_data, n_model); K must divide N."""
+    fields = dict(part.split("=", 1) for part in spec.split(",") if part)
+    unknown = set(fields) - {"devices", "model"}
+    if unknown or "devices" not in fields:
+        raise SystemExit(
+            f"--mesh expects devices=N[,model=K], got {spec!r}")
+    devices = int(fields["devices"])
+    n_model = int(fields.get("model", 1))
+    if devices < 1 or n_model < 1 or devices % n_model:
+        raise SystemExit(
+            f"--mesh: model={n_model} must divide devices={devices}")
+    return devices // n_model, n_model
 
 
 def _retrace_check(findings: dict) -> None:
@@ -59,7 +82,11 @@ def main() -> int:
                     help="also dump all findings as JSON")
     ap.add_argument("--skip-retrace", action="store_true",
                     help="skip the (executing) CNN-A retrace check")
+    ap.add_argument("--mesh", default="", metavar="devices=N[,model=K]",
+                    help="also plan each program onto this mesh and audit "
+                         "the MeshPlan (verify_mesh_plan)")
     args = ap.parse_args()
+    mesh = _parse_mesh(args.mesh) if args.mesh else None
 
     qc = QuantConfig(mode="binary", M=2, K_iters=1)
     doc: dict = {"rules": sorted(mosaic_rules.RULES)}
@@ -76,6 +103,26 @@ def main() -> int:
               f"{summ['warnings']} warning(s)")
         for f in fs:
             print(f"  {f}")
+        if mesh is not None:
+            n_data, n_model = mesh
+            plan = distributed.plan_mesh(prog, n_data=n_data,
+                                         n_model=n_model)
+            mfs = verify_mesh_plan(prog, plan)
+            msumm = summarize(mfs)
+            n_errors += msumm["errors"]
+            doc[key]["mesh"] = {
+                "n_data": n_data, "n_model": n_model,
+                "summary": msumm,
+                "findings": [f.as_dict() for f in mfs],
+                "totals": distributed.mesh_totals(prog, plan),
+            }
+            print(f"{key} @ mesh {n_data}x{n_model}: "
+                  f"{msumm['errors']} error(s), "
+                  f"{msumm['warnings']} warning(s), "
+                  f"{sum(1 for s in plan.shards if s.kind == 'bd')} "
+                  f"bd-sharded layer(s)")
+            for f in mfs:
+                print(f"  {f}")
 
     if not args.skip_retrace:
         print("cnn_a retrace check (3x repeated mixed-m_active traffic)")
